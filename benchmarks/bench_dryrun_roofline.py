@@ -1,0 +1,43 @@
+"""Roofline summary benchmark: reads experiments/dryrun/*.json (produced by
+``python -m repro.launch.dryrun``) and emits one CSV row per (arch × shape ×
+mesh × variant) with the three roofline terms. Skips silently when the
+dry-run artifacts are absent (CPU-only test environments)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+
+def main() -> None:
+    files = sorted(glob.glob(os.path.join("experiments", "dryrun", "*.json")))
+    if not files:
+        emit("roofline/none", 0.0, "run `python -m repro.launch.dryrun --all` first")
+        return
+    for f in files:
+        with open(f) as fh:
+            d = json.load(fh)
+        tag = "+".join(d.get("variants") or []) or "baseline"
+        if d.get("kind") == "fl_round":
+            emit(
+                f"roofline/{d['arch']}/{d['shape']}/{d['mesh']}/{tag}",
+                d["t_collective_per_step"] * 1e6,
+                f"coll_per_step={d['coll_bytes_per_chip_per_step'] / 2**20:.1f}MiB;"
+                f"tx_per_step={d['t_collective_per_step'] * 1e3:.2f}ms",
+            )
+            continue
+        emit(
+            f"roofline/{d['arch']}/{d['shape']}/{d['mesh']}/{tag}",
+            d["bound_time"] * 1e6 if "bound_time" in d else max(
+                d["t_compute"], d["t_memory"], d["t_collective"]
+            ) * 1e6,
+            f"tc={d['t_compute'] * 1e3:.2f}ms;tm={d['t_memory'] * 1e3:.2f}ms;"
+            f"tx={d['t_collective'] * 1e3:.2f}ms;dom={d['dominant']};"
+            f"util={d['utility_ratio']:.3f};hbm={d['hbm_per_chip_gb']}GB",
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Kernel microbenchmarks.
+
+On this CPU container the Pallas kernels run in interpret mode (a Python
+emulator — timings are NOT TPU numbers and are reported only as
+correctness-path cost); the jnp oracle timings are the XLA:CPU reference.
+The derived column reports bytes/FLOPs so TPU projections can be made from
+the roofline constants.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.kernels.aggregate.ref import aggregate_ref
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.similarity.ref import gram_ref
+from repro.kernels.similarity.ops import pairwise_distances_device
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+
+    # similarity: n=100 clients (paper scale), d = MLP parameter count
+    n, d = 100, 2060
+    G = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    us, _ = timed(lambda: np.asarray(gram_ref(G)))
+    emit("kernels/similarity_gram_ref_cpu", us, f"n={n};d={d};flops={2 * n * n * d:.2e}")
+    us, _ = timed(
+        lambda: np.asarray(pairwise_distances_device(G, "arccos", interpret=True)), repeats=1
+    )
+    emit("kernels/similarity_pallas_interpret", us, "mode=interpret;NOT_tpu_time")
+
+    # aggregation: m=10 clients × 1M-param model
+    k, p = 10, 1_000_000
+    U = jnp.asarray(rng.normal(size=(k, p)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k,)), jnp.float32)
+    us, _ = timed(lambda: np.asarray(aggregate_ref(U, w)))
+    emit("kernels/aggregate_ref_cpu", us, f"k={k};p={p};bytes={4 * k * p:.2e}")
+
+    # flash attention: small block sweep
+    q = jnp.asarray(rng.normal(size=(1, 256, 8, 64)), jnp.float32)
+    kk = jnp.asarray(rng.normal(size=(1, 256, 2, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 256, 2, 64)), jnp.float32)
+    us, _ = timed(lambda: np.asarray(attention_ref(q, kk, v)))
+    emit("kernels/flash_attention_ref_cpu", us, "b=1;s=256;h=8;kv=2;hd=64")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Algorithm cost scaling (Theorems 3 & 4): Algorithm 1 is O(n log n);
+Algorithm 2 is O(n^2 d + X) dominated by the similarity matrix."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.core import ClientPopulation, build_plan_algorithm1, build_plan_algorithm2
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    for n in (50, 100, 200, 400):
+        pop = ClientPopulation(rng.integers(50, 1000, size=n))
+        us, _ = timed(lambda: build_plan_algorithm1(pop, 10), repeats=5)
+        emit(f"sampler_cost/algorithm1/n={n}", us, "theory=O(n log n)")
+    for n in (50, 100, 200):
+        pop = ClientPopulation(rng.integers(50, 1000, size=n))
+        G = rng.normal(size=(n, 256))
+        us, _ = timed(lambda: build_plan_algorithm2(pop, 10, G), repeats=2)
+        emit(f"sampler_cost/algorithm2/n={n}", us, "theory=O(n^2 d + ward)")
+
+
+if __name__ == "__main__":
+    main()

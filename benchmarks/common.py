@@ -1,0 +1,51 @@
+"""Shared benchmark helpers: timed CSV rows + small FL runs."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.2f},{derived}", flush=True)
+
+
+def timed(fn, *args, repeats: int = 3, warmup: int = 1, **kw) -> tuple[float, object]:
+    out = None
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeats
+    return dt * 1e6, out
+
+
+def run_fl(dataset, sampler, *, rounds, n_local, batch, lr, mu=0.0, seed=0):
+    """Small FL run returning (final rolling loss, final acc, mean distinct classes)."""
+    import jax
+
+    from repro.fl import FederatedServer, FLConfig
+    from repro.models.simple import fedprox_loss, init_mlp
+
+    dim = dataset.clients[0].x_train.shape[1]
+    params = init_mlp((dim, 50, 10), seed=1)  # the paper's 1x50 hidden MLP
+    from repro.optim import sgd
+
+    cfg = FLConfig(n_rounds=rounds, n_local_steps=n_local, batch_size=batch, seed=seed, fedprox_mu=mu)
+    kw = {"loss_fn": fedprox_loss} if mu else {}
+    srv = FederatedServer(dataset, sampler, params, sgd(lr), cfg, **kw)
+    hist = srv.run()
+    del jax
+    losses = hist.series("train_loss")
+    roll = hist.rolling("train_loss", window=min(10, rounds))
+    return {
+        "final_loss": float(roll[-1]),
+        "first_loss": float(losses[0]),
+        "final_acc": float(np.nanmax(hist.series("test_acc")[-3:])),
+        "mean_distinct_classes": float(hist.series("n_distinct_classes").mean()),
+        "mean_distinct_clients": float(hist.series("n_distinct_clients").mean()),
+    }

@@ -1,0 +1,61 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  fig1_controlled      — Figure 1 (controlled MNIST-style setting)
+  fig2_dirichlet       — Figure 2 (Dirichlet-α heterogeneity sweep)
+  table_variance       — Section 3.2 / Appendix B statistics (theory vs MC)
+  ablations            — Appendix D.2/D.4/D.5
+  bench_sampler_cost   — Theorems 3/4 complexity scaling
+  bench_kernels        — Pallas kernel paths + oracles
+  bench_fl_collectives — communication accounting (paper's motivation)
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from benchmarks import (
+    ablations,
+    bench_dryrun_roofline,
+    bench_fl_collectives,
+    bench_kernels,
+    bench_sampler_cost,
+    beyond_paper,
+    fig1_controlled,
+    fig2_dirichlet,
+    table_variance,
+)
+
+MODULES = [
+    ("table_variance", table_variance),
+    ("bench_sampler_cost", bench_sampler_cost),
+    ("bench_fl_collectives", bench_fl_collectives),
+    ("bench_kernels", bench_kernels),
+    ("bench_dryrun_roofline", bench_dryrun_roofline),
+    ("fig1_controlled", fig1_controlled),
+    ("fig2_dirichlet", fig2_dirichlet),
+    ("ablations", ablations),
+    ("beyond_paper", beyond_paper),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = []
+    for name, mod in MODULES:
+        t0 = time.time()
+        try:
+            mod.main()
+        except Exception:  # noqa: BLE001
+            failures.append(name)
+            traceback.print_exc()
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    if failures:
+        print(f"# FAILED: {failures}", file=sys.stderr)
+        raise SystemExit(1)
+    print("# all benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Flat-dict ``.npz`` checkpointing with step metadata.
+
+Pytrees are flattened to ``a/b/c`` path keys; restore rebuilds against a
+reference tree (structure is authoritative from the caller, arrays from
+disk). Atomic via write-to-temp + rename. Good enough for single-host
+drivers; a real deployment would swap in tensorstore/orbax behind the same
+two functions.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind not in "fiub?":  # ml_dtypes (bf16, fp8) -> fp32 (lossless up-cast)
+            arr = np.asarray(leaf).astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def save_checkpoint(path: str, tree: Any, *, step: int = 0, extra: dict | None = None) -> None:
+    flat = _flatten(tree)
+    meta = {"step": int(step), "extra": extra or {}}
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)), suffix=".tmp")
+    os.close(fd)
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, __meta__=np.frombuffer(json.dumps(meta).encode(), dtype=np.uint8), **flat)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
+def restore_checkpoint(path: str, reference: Any) -> tuple[Any, int]:
+    """Restore arrays into the structure of ``reference``; returns (tree, step)."""
+    with np.load(path) as data:
+        meta = json.loads(bytes(data["__meta__"]).decode())
+        flat = {k: data[k] for k in data.files if k != "__meta__"}
+    leaves_ref, treedef = jax.tree_util.tree_flatten_with_path(reference)
+    leaves = []
+    for path_keys, ref_leaf in leaves_ref:
+        key = "/".join(_path_str(p) for p in path_keys)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = flat[key]
+        if arr.shape != ref_leaf.shape:
+            raise ValueError(f"{key}: checkpoint shape {arr.shape} != expected {ref_leaf.shape}")
+        leaves.append(jax.numpy.asarray(arr).astype(ref_leaf.dtype))
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(reference), leaves
+    )
+    return tree, int(meta["step"])

@@ -1,0 +1,46 @@
+"""Clustered client sampling for federated learning (Fraboni et al., ICML'21).
+
+Public API:
+  - ClientPopulation / SamplingPlan / SampleResult datatypes
+  - samplers: UniformSampler (FedAvg), MDSampler, Algorithm1Sampler,
+    Algorithm2Sampler, TargetSampler, generic ClusteredSampler
+  - validate_plan: exact Proposition-1 checking
+  - statistics: closed-form variance / inclusion-probability formulas
+"""
+from repro.core.types import ClientPopulation, SamplingPlan, SampleResult
+from repro.core.samplers import (
+    SAMPLERS,
+    Algorithm1Sampler,
+    Algorithm2Sampler,
+    ClientSampler,
+    ClusteredSampler,
+    MDSampler,
+    TargetSampler,
+    UniformSampler,
+    build_plan_algorithm1,
+    build_plan_algorithm2,
+    build_plan_target,
+    max_draws_bound,
+    validate_plan,
+)
+from repro.core import statistics
+
+__all__ = [
+    "ClientPopulation",
+    "SamplingPlan",
+    "SampleResult",
+    "ClientSampler",
+    "UniformSampler",
+    "MDSampler",
+    "ClusteredSampler",
+    "Algorithm1Sampler",
+    "Algorithm2Sampler",
+    "TargetSampler",
+    "build_plan_algorithm1",
+    "build_plan_algorithm2",
+    "build_plan_target",
+    "validate_plan",
+    "max_draws_bound",
+    "statistics",
+    "SAMPLERS",
+]

@@ -1,0 +1,12 @@
+from repro.core.clustering.similarity import MEASURES, pairwise_distances
+from repro.core.clustering.ward import ward_linkage, linkage_children, leaves_of
+from repro.core.clustering.tree import cut_tree
+
+__all__ = [
+    "MEASURES",
+    "pairwise_distances",
+    "ward_linkage",
+    "linkage_children",
+    "leaves_of",
+    "cut_tree",
+]

@@ -1,0 +1,32 @@
+"""Client-selection schemes (the paper's core contribution lives here)."""
+from repro.core.samplers.base import ClientSampler, max_draws_bound, validate_plan
+from repro.core.samplers.uniform import UniformSampler
+from repro.core.samplers.md import MDSampler
+from repro.core.samplers.clustered import ClusteredSampler
+from repro.core.samplers.algorithm1 import Algorithm1Sampler, build_plan_algorithm1
+from repro.core.samplers.algorithm2 import Algorithm2Sampler, build_plan_algorithm2
+from repro.core.samplers.target import TargetSampler, build_plan_target
+
+SAMPLERS = {
+    "uniform": UniformSampler,
+    "md": MDSampler,
+    "algorithm1": Algorithm1Sampler,
+    "algorithm2": Algorithm2Sampler,
+    "target": TargetSampler,
+}
+
+__all__ = [
+    "ClientSampler",
+    "UniformSampler",
+    "MDSampler",
+    "ClusteredSampler",
+    "Algorithm1Sampler",
+    "Algorithm2Sampler",
+    "TargetSampler",
+    "build_plan_algorithm1",
+    "build_plan_algorithm2",
+    "build_plan_target",
+    "validate_plan",
+    "max_draws_bound",
+    "SAMPLERS",
+]

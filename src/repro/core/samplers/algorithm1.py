@@ -1,0 +1,25 @@
+"""Algorithm 1 — clustered sampling based on sample size (Section 4).
+
+Deterministic urn-filling over descending-``n_i`` clients. O(n log n); since
+it only depends on the ``n_i`` it is computed once and reused every round.
+Each client appears in at most ``floor(m p_i) + 2`` distributions, versus
+``m`` under MD sampling.
+"""
+from __future__ import annotations
+
+from repro.core.allocation import allocate_by_size
+from repro.core.samplers.clustered import ClusteredSampler
+from repro.core.types import ClientPopulation, SamplingPlan
+
+
+def build_plan_algorithm1(population: ClientPopulation, m: int) -> SamplingPlan:
+    M = population.total_samples
+    tokens = allocate_by_size(m * population.n_samples, n_urns=m, capacity=M)
+    return SamplingPlan(r=tokens / M, r_tokens=tokens)
+
+
+class Algorithm1Sampler(ClusteredSampler):
+    """Sample-size clustered sampling; the plan is static across rounds."""
+
+    def __init__(self, population: ClientPopulation, m: int, *, seed: int = 0):
+        super().__init__(population, build_plan_algorithm1(population, m), seed=seed)

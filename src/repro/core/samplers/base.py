@@ -1,0 +1,109 @@
+"""Sampler interface + Proposition-1 validation.
+
+A sampler consumes the client population (and, for Algorithm 2, the clients'
+representative gradients) and produces a :class:`SampleResult` per round.
+Plan-based samplers expose their ``SamplingPlan`` so its Proposition-1
+conditions can be checked exactly.
+"""
+from __future__ import annotations
+
+import abc
+from typing import Optional
+
+import numpy as np
+
+from repro.core.types import ClientPopulation, SamplingPlan, SampleResult
+
+
+class ClientSampler(abc.ABC):
+    """Base class for all client-selection schemes."""
+
+    #: whether the scheme satisfies Assumption 4 (unbiased aggregation)
+    unbiased: bool = True
+
+    def __init__(self, population: ClientPopulation, m: int, *, seed: int = 0):
+        if m <= 0:
+            raise ValueError("m must be positive")
+        self.population = population
+        self.m = int(m)
+        self._rng = np.random.default_rng(seed)
+
+    @abc.abstractmethod
+    def sample(self, round_idx: int) -> SampleResult:
+        """Draw the clients participating in round ``round_idx``."""
+
+    # Hooks -----------------------------------------------------------------
+    def observe_updates(self, client_ids: np.ndarray, updates: np.ndarray) -> None:
+        """Feed back the sampled clients' representative gradients.
+
+        ``updates`` is (len(client_ids), d) — the flattened ``θ_i - θ`` per
+        sampled client. Only similarity-based samplers use this.
+        """
+        del client_ids, updates
+
+    @property
+    def plan(self) -> Optional[SamplingPlan]:
+        """Current ``r_{k,i}`` matrix for plan-based samplers, else None."""
+        return None
+
+    # Shared machinery -------------------------------------------------------
+    def _draw_from_plan(self, plan: SamplingPlan) -> SampleResult:
+        """Sample l_k ~ W_k independently (the clustered-sampling draw)."""
+        n = self.population.n_clients
+        clients = np.empty(plan.m, dtype=np.int64)
+        for k in range(plan.m):
+            clients[k] = self._rng.choice(n, p=plan.r[k])
+        counts = np.bincount(clients, minlength=n)
+        return SampleResult(clients=clients, agg_weights=counts / plan.m)
+
+
+def validate_plan(
+    plan: SamplingPlan, population: ClientPopulation, *, atol: float = 1e-9
+) -> None:
+    """Assert the two Proposition-1 conditions on an ``r`` matrix.
+
+    * eq. (7): every row of ``r`` is a probability distribution,
+    * eq. (8): every column sums to ``m * p_i`` (unbiasedness).
+
+    Raises ``ValueError`` with a precise diagnostic on violation. When the
+    plan carries its integer token allocation the check is exact.
+    """
+    r = plan.r
+    m, n = r.shape
+    if n != population.n_clients:
+        raise ValueError(f"plan covers {n} clients, population has {population.n_clients}")
+    if (r < -atol).any():
+        bad = np.argwhere(r < -atol)[0]
+        raise ValueError(f"negative probability r[{bad[0]},{bad[1]}] = {r[tuple(bad)]}")
+    row_sums = r.sum(axis=1)
+    if not np.allclose(row_sums, 1.0, atol=atol):
+        k = int(np.argmax(np.abs(row_sums - 1.0)))
+        raise ValueError(f"eq.(7) violated: sum_i r[{k},i] = {row_sums[k]!r} != 1")
+    col_sums = r.sum(axis=0)
+    target = plan.m * population.importances
+    if not np.allclose(col_sums, target, atol=atol):
+        i = int(np.argmax(np.abs(col_sums - target)))
+        raise ValueError(
+            f"eq.(8) violated: sum_k r[k,{i}] = {col_sums[i]!r} != m*p_i = {target[i]!r}"
+        )
+    if plan.r_tokens is not None:
+        tok = np.asarray(plan.r_tokens, dtype=np.int64)
+        M = population.total_samples
+        if (tok.sum(axis=1) != M).any():
+            raise ValueError("integer allocation: some urn does not hold exactly M tokens")
+        expect = plan.m * population.n_samples
+        if (tok.sum(axis=0) != expect).any():
+            i = int(np.argmax(tok.sum(axis=0) != expect))
+            raise ValueError(
+                f"integer allocation: client {i} allocated {tok.sum(axis=0)[i]} "
+                f"tokens, expected m*n_i = {expect[i]}"
+            )
+
+
+def max_draws_bound(plan: SamplingPlan) -> np.ndarray:
+    """Upper bound on how many times each client can be drawn = #{k: r_{k,i} > 0}.
+
+    For Algorithm 1 this is at most ``floor(m p_i) + 2`` (Section 4 of the
+    paper), versus ``m`` for MD sampling.
+    """
+    return (plan.r > 0).sum(axis=0)

@@ -1,0 +1,11 @@
+from repro.data.synthetic import make_classification_data
+from repro.data.federated import ClientData, FederatedDataset
+from repro.data.tokens import TokenBatch, TokenPipeline
+
+__all__ = [
+    "make_classification_data",
+    "ClientData",
+    "FederatedDataset",
+    "TokenBatch",
+    "TokenPipeline",
+]

@@ -1,0 +1,20 @@
+from repro.fl.partition import by_class_shards, dirichlet_labels, PAPER_SIZE_PROFILE
+from repro.fl.client import local_update, draw_batch_indices
+from repro.fl.aggregation import aggregate_round, weighted_tree_sum, flatten_params
+from repro.fl.server import FederatedServer, FLConfig
+from repro.fl.history import History, RoundRecord
+
+__all__ = [
+    "by_class_shards",
+    "dirichlet_labels",
+    "PAPER_SIZE_PROFILE",
+    "local_update",
+    "draw_batch_indices",
+    "aggregate_round",
+    "weighted_tree_sum",
+    "flatten_params",
+    "FederatedServer",
+    "FLConfig",
+    "History",
+    "RoundRecord",
+]

@@ -1,0 +1,49 @@
+"""Server-side model aggregation.
+
+Unbiased schemes (eq. 4): ``θ^{t+1} = Σ_{k} (1/m) θ_{l_k}`` — equivalently a
+weighted sum of the *distinct* updated models with the realized weights
+``ω_i``. FedAvg-style biased sampling (eq. 3) adds ``stale_weight · θ^t``.
+
+Two backends: pure-jnp tree arithmetic (default, any device) and the Pallas
+``aggregate`` kernel over stacked flat updates (TPU hot path).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def weighted_tree_sum(trees: Sequence, weights: np.ndarray):
+    """Σ_k w_k · tree_k without stacking (memory-lean host-side default)."""
+    if len(trees) != len(weights):
+        raise ValueError(f"{len(trees)} trees vs {len(weights)} weights")
+    out = jax.tree_util.tree_map(lambda x: jnp.asarray(weights[0], x.dtype) * x, trees[0])
+    for w, tree in zip(weights[1:], trees[1:]):
+        out = jax.tree_util.tree_map(
+            lambda acc, x: acc + jnp.asarray(w, x.dtype) * x, out, tree
+        )
+    return out
+
+
+def aggregate_round(
+    global_params,
+    client_params: Sequence,
+    client_weights: np.ndarray,
+    stale_weight: float = 0.0,
+):
+    """Combine distinct client models (+ optional stale global mass)."""
+    new = weighted_tree_sum(client_params, np.asarray(client_weights, dtype=np.float64))
+    if stale_weight:
+        new = jax.tree_util.tree_map(
+            lambda a, g: a + jnp.asarray(stale_weight, g.dtype) * g, new, global_params
+        )
+    return new
+
+
+def flatten_params(tree) -> jnp.ndarray:
+    """Flatten a pytree into one vector (representative-gradient plumbing)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.concatenate([jnp.ravel(x) for x in leaves])

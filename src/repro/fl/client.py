@@ -1,0 +1,54 @@
+"""Client-side local work: N SGD steps from the received global model.
+
+A single jitted ``lax.scan`` over pre-drawn batch indices — the same code
+path is reused by every sampled client in a round (shapes are static:
+(N, B) index matrix), so one compile covers the whole FL run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer, apply_updates
+
+LossFn = Callable[..., jnp.ndarray]  # (params, x, y, [global_params]) -> scalar
+
+
+@functools.partial(jax.jit, static_argnames=("loss_fn", "opt", "fedprox_mu"))
+def local_update(
+    params,
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    batch_idx: jnp.ndarray,  # (N, B) int32 rows into x/y
+    loss_fn: LossFn,
+    opt: Optimizer,
+    fedprox_mu: float = 0.0,
+):
+    """Run N local steps; returns (updated params, mean local loss)."""
+    global_params = params
+
+    def step(carry, idx):
+        p, opt_state, t = carry
+        xb, yb = x[idx], y[idx]
+        if fedprox_mu:
+            loss, grads = jax.value_and_grad(
+                lambda q: loss_fn(q, xb, yb, global_params, fedprox_mu)
+            )(p)
+        else:
+            loss, grads = jax.value_and_grad(lambda q: loss_fn(q, xb, yb))(p)
+        updates, opt_state = opt.update(grads, opt_state, p, t)
+        return (apply_updates(p, updates), opt_state, t + 1), loss
+
+    init = (params, opt.init(params), jnp.zeros((), jnp.int32))
+    (new_params, _, _), losses = jax.lax.scan(step, init, batch_idx)
+    return new_params, losses.mean()
+
+
+def draw_batch_indices(rng, n_data: int, n_steps: int, batch_size: int) -> jnp.ndarray:
+    """Pre-draw the (N, B) batch index matrix for one client round."""
+    return jnp.asarray(
+        rng.integers(0, n_data, size=(n_steps, batch_size)), dtype=jnp.int32
+    )

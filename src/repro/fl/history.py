@@ -1,0 +1,44 @@
+"""Per-round FL run telemetry."""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class RoundRecord:
+    round: int
+    train_loss: float  # global federated loss (eq. 1) or local-mean proxy
+    test_acc: float
+    n_distinct_clients: int
+    n_distinct_classes: int
+    agg_weights: np.ndarray | None = None
+
+
+@dataclasses.dataclass
+class History:
+    records: list[RoundRecord] = dataclasses.field(default_factory=list)
+
+    def append(self, rec: RoundRecord) -> None:
+        self.records.append(rec)
+
+    def series(self, field: str) -> np.ndarray:
+        return np.array([getattr(r, field) for r in self.records])
+
+    def rolling(self, field: str, window: int = 50) -> np.ndarray:
+        """Rolling mean, as used for the paper's training-loss figures."""
+        x = self.series(field)
+        if len(x) < 1:
+            return x
+        kernel = np.ones(min(window, len(x))) / min(window, len(x))
+        return np.convolve(x, kernel, mode="valid")
+
+    def to_json(self) -> str:
+        return json.dumps(
+            [
+                {k: v for k, v in dataclasses.asdict(r).items() if k != "agg_weights"}
+                for r in self.records
+            ]
+        )

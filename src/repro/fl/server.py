@@ -1,0 +1,117 @@
+"""The FL orchestrator: sample → local work → unbiased aggregation.
+
+Faithful to the paper's protocol:
+  * each round, the sampler draws ``l_1..l_m`` (with multiplicity);
+  * only the *distinct* sampled clients do local work (a client drawn twice
+    trains once and carries weight 2/m — MD/clustered semantics);
+  * aggregation is the realized weighted sum (eq. 3/4);
+  * similarity-based samplers get the representative gradients
+    ``θ_i^{t+1} - θ^t`` of the sampled clients after the round
+    (Algorithm 2 line 1's input), never raw data.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.samplers.base import ClientSampler
+from repro.data.federated import FederatedDataset
+from repro.fl.aggregation import aggregate_round, flatten_params
+from repro.fl.client import draw_batch_indices, local_update
+from repro.fl.history import History, RoundRecord
+from repro.models.simple import accuracy, classification_loss
+from repro.optim.base import Optimizer
+
+
+@dataclasses.dataclass
+class FLConfig:
+    n_rounds: int = 100
+    n_local_steps: int = 50  # N in the paper
+    batch_size: int = 50  # B in the paper
+    fedprox_mu: float = 0.0
+    eval_every: int = 1
+    seed: int = 0
+
+
+class FederatedServer:
+    def __init__(
+        self,
+        dataset: FederatedDataset,
+        sampler: ClientSampler,
+        init_params,
+        optimizer: Optimizer,
+        config: FLConfig,
+        loss_fn: Callable = classification_loss,
+        acc_fn: Callable = accuracy,
+    ):
+        self.dataset = dataset
+        self.sampler = sampler
+        self.params = init_params
+        self.opt = optimizer
+        self.cfg = config
+        self.loss_fn = loss_fn
+        self.acc_fn = acc_fn
+        self._rng = np.random.default_rng(config.seed)
+        self.history = History()
+        self._x_test, self._y_test = dataset.global_test()
+
+    # ------------------------------------------------------------------
+    def run_round(self, t: int) -> RoundRecord:
+        cfg = self.cfg
+        result = self.sampler.sample(t)
+        distinct = result.unique_clients
+        weights = result.agg_weights[distinct]
+
+        client_models, losses, updates_flat = [], [], []
+        for cid in distinct:
+            data = self.dataset.clients[int(cid)]
+            idx = draw_batch_indices(
+                self._rng, data.n_train, cfg.n_local_steps, cfg.batch_size
+            )
+            new_p, loss = local_update(
+                self.params,
+                jnp.asarray(data.x_train),
+                jnp.asarray(data.y_train),
+                idx,
+                self.loss_fn,
+                self.opt,
+                cfg.fedprox_mu,
+            )
+            client_models.append(new_p)
+            losses.append(float(loss))
+            updates_flat.append(np.asarray(flatten_params(new_p) - flatten_params(self.params)))
+
+        self.params = aggregate_round(
+            self.params, client_models, weights, result.stale_weight
+        )
+        # feed representative gradients back (Algorithm 2's input)
+        self.sampler.observe_updates(distinct, np.stack(updates_flat))
+
+        classes = np.unique(
+            np.concatenate(
+                [self.dataset.clients[int(c)].y_train for c in distinct]
+            )
+        )
+        test_acc = (
+            float(self.acc_fn(self.params, jnp.asarray(self._x_test), jnp.asarray(self._y_test)))
+            if (t % cfg.eval_every == 0)
+            else float("nan")
+        )
+        rec = RoundRecord(
+            round=t,
+            train_loss=float(np.average(losses, weights=weights / weights.sum())),
+            test_acc=test_acc,
+            n_distinct_clients=len(distinct),
+            n_distinct_classes=len(classes),
+            agg_weights=result.agg_weights,
+        )
+        self.history.append(rec)
+        return rec
+
+    def run(self) -> History:
+        for t in range(self.cfg.n_rounds):
+            self.run_round(t)
+        return self.history

@@ -1,0 +1,38 @@
+"""Jitted public API: aggregate stacked client updates (flat or pytree)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.aggregate.kernel import aggregate_kernel
+
+
+def aggregate_flat(updates, weights, *, interpret: bool = False) -> jnp.ndarray:
+    """(k, p) stacked flat updates × (k,) weights -> (p,)."""
+    return aggregate_kernel(jnp.asarray(updates), jnp.asarray(weights), interpret=interpret)
+
+
+def aggregate_trees(trees: list, weights: np.ndarray, *, interpret: bool = False):
+    """Weighted sum of identically-structured pytrees through the kernel.
+
+    Leaves are flattened and concatenated once (single kernel launch —
+    aggregation is bandwidth-bound, so one long stream beats per-leaf
+    launches), then split back.
+    """
+    leaves0, treedef = jax.tree_util.tree_flatten(trees[0])
+    sizes = [x.size for x in leaves0]
+    shapes = [x.shape for x in leaves0]
+    dtypes = [x.dtype for x in leaves0]
+
+    def flatten(tree):
+        leaves = jax.tree_util.tree_leaves(tree)
+        return jnp.concatenate([jnp.ravel(x).astype(jnp.float32) for x in leaves])
+
+    stacked = jnp.stack([flatten(t) for t in trees])
+    flat = aggregate_flat(stacked, jnp.asarray(weights), interpret=interpret)
+    out, off = [], 0
+    for size, shape, dtype in zip(sizes, shapes, dtypes):
+        out.append(flat[off : off + size].reshape(shape).astype(dtype))
+        off += size
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the aggregation kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def aggregate_ref(updates: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """(k, p), (k,) -> (p,) in f32."""
+    return jnp.einsum(
+        "k,kp->p", weights.astype(jnp.float32), updates.astype(jnp.float32)
+    )

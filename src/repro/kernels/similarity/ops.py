@@ -1,0 +1,43 @@
+"""Jitted public API: pairwise client distances on device.
+
+Drop-in replacement for ``repro.core.clustering.similarity.pairwise_distances``
+(numpy) — Algorithm 2 passes ``distance_fn=pallas_pairwise_distances`` to run
+the O(n²d) stage on TPU. On CPU builds, set ``interpret=True`` (tests do).
+"""
+from __future__ import annotations
+
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.similarity.kernel import pairwise_kernel
+from repro.kernels.similarity.ref import distances_from_gram
+
+
+def pairwise_distances_device(
+    G,
+    measure: str = "arccos",
+    *,
+    block_n: int = 128,
+    block_d: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """(n, d) representative gradients -> (n, n) distance matrix."""
+    G = jnp.asarray(G, jnp.float32)
+    if measure in ("arccos", "l2"):
+        gram = pairwise_kernel(G, op="gram", block_n=block_n, block_d=block_d, interpret=interpret)
+        return distances_from_gram(gram, measure)
+    if measure == "l1":
+        d = pairwise_kernel(G, op="l1", block_n=block_n, block_d=block_d, interpret=interpret)
+        d = jnp.where(jnp.eye(d.shape[0], dtype=bool), 0.0, d)
+        return jnp.maximum(d, d.T)
+    raise ValueError(f"unknown measure {measure!r}")
+
+
+def make_distance_fn(*, interpret: bool = False):
+    """Adapter matching ``repro.core.samplers.algorithm2.DistanceFn``."""
+
+    def fn(G: np.ndarray, measure: str) -> np.ndarray:
+        return np.asarray(pairwise_distances_device(G, measure, interpret=interpret))
+
+    return fn

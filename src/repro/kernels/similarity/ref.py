@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the similarity kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gram_ref(G: jnp.ndarray) -> jnp.ndarray:
+    G = G.astype(jnp.float32)
+    return G @ G.T
+
+
+def l1_ref(G: jnp.ndarray) -> jnp.ndarray:
+    G = G.astype(jnp.float32)
+    return jnp.abs(G[:, None, :] - G[None, :, :]).sum(axis=-1)
+
+
+def distances_from_gram(gram: jnp.ndarray, measure: str) -> jnp.ndarray:
+    """Derive arccos / l2 distances from the Gram matrix (f32, symmetric)."""
+    sq = jnp.diagonal(gram)
+    if measure == "l2":
+        d2 = sq[:, None] + sq[None, :] - 2.0 * gram
+        dist = jnp.sqrt(jnp.maximum(d2, 0.0))
+    elif measure == "arccos":
+        norms = jnp.sqrt(jnp.maximum(sq, 0.0))
+        safe = jnp.where(norms > 0, norms, 1.0)
+        cos = gram / (safe[:, None] * safe[None, :])
+        zero = norms == 0
+        both = zero[:, None] & zero[None, :]
+        either = zero[:, None] ^ zero[None, :]
+        cos = jnp.where(both, 1.0, cos)
+        cos = jnp.where(either, 0.0, cos)
+        dist = jnp.arccos(jnp.clip(cos, -1.0, 1.0))
+    else:
+        raise ValueError(measure)
+    dist = jnp.where(jnp.eye(dist.shape[0], dtype=bool), 0.0, dist)
+    return jnp.maximum(dist, dist.T)

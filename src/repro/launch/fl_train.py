@@ -1,0 +1,139 @@
+"""Clustered-sampling FL as a first-class distributed training mode.
+
+This is the paper's communication pattern mapped onto the pod (DESIGN.md
+§4): each data-parallel group plays one *sampled client* for the round —
+
+  1. the host-side sampler (MD / Algorithm 1 / Algorithm 2) draws
+     ``m = data-parallel degree`` clients and their aggregation weights,
+  2. ``fl_round_step`` = vmap(local_sgd) over the client axis (sharded over
+     the batch axes) → every group runs N *unsynchronized* local steps,
+  3. the weighted parameter combine ``Σ_k ω_k θ_k`` is one collective over
+     the client axis — the sampler literally programs the collective.
+
+Versus synchronous data-parallel training this trades the per-step gradient
+all-reduce for a per-round parameter all-reduce: collective bytes drop by
+~N× (quantified in EXPERIMENTS.md §Perf).
+
+The round step is jit/shard_map-free pure jnp + vmap: GSPMD maps the client
+axis onto ("pod","data"), the model dims onto "model" via the usual rules.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.samplers.base import ClientSampler
+from repro.models import model as mdl
+from repro.models.config import ModelConfig
+
+
+def make_local_sgd(cfg: ModelConfig, lr: float, n_local_steps: int):
+    """One client's round: N SGD steps on its own token stream."""
+
+    def local_sgd(params, tokens, targets):
+        # tokens: (N, B_local, S) — pre-drawn local batches
+
+        def step(p, batch):
+            tb, gb = batch
+
+            def lf(q):
+                loss, _ = mdl.loss_fn(cfg, q, tb, gb)
+                return loss
+
+            loss, grads = jax.value_and_grad(lf)(p)
+            p = jax.tree_util.tree_map(lambda w, g: w - lr * g.astype(w.dtype), p, grads)
+            return p, loss
+
+        new_params, losses = jax.lax.scan(step, params, (tokens, targets))
+        return new_params, losses.mean()
+
+    return local_sgd
+
+
+def make_fl_round_step(cfg: ModelConfig, lr: float, n_local_steps: int):
+    local_sgd = make_local_sgd(cfg, lr, n_local_steps)
+
+    def fl_round_step(params, client_tokens, client_targets, weights):
+        """params: global model; client_tokens/targets: (m, N, B, S) sharded
+        over the batch axes; weights: (m,) realized aggregation weights."""
+        client_params, losses = jax.vmap(local_sgd, in_axes=(None, 0, 0))(
+            params, client_tokens, client_targets
+        )
+        # θ^{t+1} = Σ_k ω_k θ_k  — eq. (4), one weighted collective
+        new_params = jax.tree_util.tree_map(
+            lambda stacked: jnp.einsum(
+                "m,m...->...", weights.astype(jnp.float32), stacked.astype(jnp.float32)
+            ).astype(stacked.dtype),
+            client_params,
+        )
+        return new_params, losses.mean()
+
+    return fl_round_step
+
+
+def fl_input_specs(cfg: ModelConfig, m: int, n_local: int, batch: int, seq: int):
+    i32 = jnp.int32
+    return {
+        "client_tokens": jax.ShapeDtypeStruct((m, n_local, batch, seq), i32),
+        "client_targets": jax.ShapeDtypeStruct((m, n_local, batch, seq), i32),
+        "weights": jax.ShapeDtypeStruct((m,), jnp.float32),
+    }
+
+
+# --------------------------------------------------------------------------
+# host-side driver (single process; production path is the same jit with a
+# production mesh — exercised by the dry-run's fl_round mode)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class FLLMConfig:
+    n_clients: int = 32
+    m: int = 8
+    n_rounds: int = 10
+    n_local_steps: int = 4
+    local_batch: int = 4
+    seq_len: int = 64
+    lr: float = 0.05
+    sampler: str = "algorithm1"
+    seed: int = 0
+
+
+def run_federated_lm(cfg: ModelConfig, fl: FLLMConfig, sampler: ClientSampler) -> list[float]:
+    """Federated LM training over synthetic per-client token streams.
+
+    Each client owns a token stream with a client-specific structure (stride
+    pattern) — heterogeneous in the same sense as the paper's non-iid
+    labels. Returns the per-round mean local loss.
+    """
+    from repro.data.tokens import TokenPipeline
+
+    rng = np.random.default_rng(fl.seed)
+    pipes = [
+        TokenPipeline(cfg.vocab_size, fl.local_batch, fl.seq_len, seed=1000 + 17 * c)
+        for c in range(fl.n_clients)
+    ]
+    params = mdl.init_params(cfg, jax.random.PRNGKey(fl.seed))
+    round_step = jax.jit(make_fl_round_step(cfg, fl.lr, fl.n_local_steps))
+
+    del rng
+    losses = []
+    for t in range(fl.n_rounds):
+        res = sampler.sample(t)
+        # fixed-shape round: all m draws participate with weight 1/m (eq. 4);
+        # a client drawn twice appears twice — identical aggregate, one compile
+        toks = np.stack(
+            [
+                np.stack([pipes[int(c)].next_batch().tokens for _ in range(fl.n_local_steps)])
+                for c in res.clients
+            ]
+        )
+        tgts = (toks * 1 + 31) % cfg.vocab_size  # same structure as TokenPipeline
+        weights = np.full(len(res.clients), 1.0 / len(res.clients), np.float32)
+        params, loss = round_step(
+            params, jnp.asarray(toks), jnp.asarray(tgts), jnp.asarray(weights)
+        )
+        losses.append(float(loss))
+    return losses

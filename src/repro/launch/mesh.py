@@ -1,0 +1,37 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing never touches jax
+device state — the dry-run sets XLA_FLAGS *before* any jax initialization
+and only then calls this.
+
+Single pod: 16×16 = 256 chips, axes ("data", "model").
+Multi-pod:  2×16×16 = 512 chips, axes ("pod", "data", "model") — the "pod"
+axis carries only data-parallel/FSDP traffic (DCN-friendly), "model" stays
+inside a pod (ICI).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over the locally available devices (tests)."""
+    return jax.make_mesh(
+        (data, model), ("data", "model"), axis_types=(AxisType.Auto, AxisType.Auto)
+    )
+
+
+def batch_axes(mesh) -> tuple[str, ...]:
+    """Axes that shard the batch / FSDP dimension."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def mesh_chips(mesh) -> int:
+    return mesh.devices.size

@@ -1,0 +1,149 @@
+"""Three-term roofline model from compiled dry-run artifacts.
+
+    compute    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory     = HLO_bytes / (chips × HBM_bw)
+    collective = collective_bytes / (chips × link_bw)
+
+``cost_analysis()`` on the SPMD-partitioned module reports *per-device*
+flops/bytes, so the per-chip division is already applied; collective bytes
+are parsed out of the optimized HLO (per-device buffer sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (given by the brief).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s per chip
+LINK_BW = 50e9  # B/s per ICI link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+_SHAPE_RE = re.compile(r"([a-z]+[0-9a-z]*)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collectives(hlo_text: str) -> dict[str, dict[str, float]]:
+    """Sum per-device output bytes of every collective instruction, by kind."""
+    out: dict[str, dict[str, float]] = {
+        k: {"count": 0, "bytes": 0.0} for k in _COLLECTIVES
+    }
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "=" not in stripped:
+            continue
+        lhs, _, rhs = stripped.partition("=")
+        kind = None
+        rl = rhs.lstrip()
+        for k in _COLLECTIVES:
+            # match `bf16[...] all-reduce(` or `(f32[..],..) all-reduce-start(`
+            if re.search(rf"(^|\)\s|\]\S*\s){re.escape(k)}(-start)?\(", rl):
+                kind = k
+                break
+        if kind is None:
+            continue
+        # output shapes sit between '=' and the op name
+        head = rl.split(kind)[0]
+        nbytes = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(head))
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += nbytes
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    coll_detail: dict
+    model_flops_global: float
+    arg_bytes_per_chip: float = 0.0
+    temp_bytes_per_chip: float = 0.0
+    out_bytes_per_chip: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_chip / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_chip / LINK_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def utility_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPS — how much compiled compute is 'useful'."""
+        hlo = self.flops_per_chip * self.chips
+        return self.model_flops_global / hlo if hlo else float("nan")
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.update(
+            t_compute=self.t_compute,
+            t_memory=self.t_memory,
+            t_collective=self.t_collective,
+            dominant=self.dominant,
+            utility_ratio=self.utility_ratio,
+        )
+        return d
+
+
+def model_flops(n_params_active: int, tokens: int, kind: str) -> float:
+    """6·N·D for training, 2·N·D for forward-only (prefill / decode)."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_params_active * tokens
+
+
+def active_params(params_shape, cfg) -> tuple[int, int]:
+    """(total, active) parameter counts; MoE experts count at top_k/n_routed."""
+    import jax
+
+    total = 0
+    active = 0.0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params_shape)[0]:
+        name = str(path[-1].key) if hasattr(path[-1], "key") else str(path[-1])
+        size = 1
+        for s in leaf.shape:
+            size *= s
+        total += size
+        if cfg.moe is not None and name in ("e_gate", "e_up", "e_down"):
+            active += size * (cfg.moe.top_k / cfg.moe.n_routed)
+        else:
+            active += size
+    return total, int(active)

@@ -1,0 +1,215 @@
+"""Sharding rules: parameter / activation / cache PartitionSpecs.
+
+Scheme (DESIGN.md §6): FSDP on the batch axes × tensor-parallel on "model".
+
+* column-parallel 2D weights (d_in, d_out): P(fsdp, "model")
+* row-parallel    2D weights (names below): P("model", fsdp)
+* embedding (V, D): P("model", fsdp) — vocab-sharded so tied logits land
+  P(batch, None, "model"); lm_head (D, V): P(fsdp, "model").
+* MoE expert stacks (E, d, f): baseline shards the *ffn* dim on "model"
+  (tensor-parallel experts). Expert-parallel (E on "model") is the §Perf
+  variant, toggled by ``expert_parallel=True``.
+* norms / small vectors / scalars: replicated.
+* leaves under the scan "stack" get a leading None for the repeat dim.
+
+Uneven shardings (e.g. whisper's 51865 vocab over 16) are allowed — GSPMD
+pads — so every assigned architecture lowers with the same rules.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import batch_axes
+
+# row-parallel: input dim carries the "model" shard
+_ROW_PARALLEL = ("w_down", "w_out")
+_REPLICATED_1D = ("scale", "bias", "lam", "out_norm", "q_norm", "k_norm")
+# Attention-family projections are FSDP-only (d_in sharded over batch axes,
+# d_out replicated): attention compute is *sequence-parallel* over the model
+# axis (see repro.models.sharding_hints), and head-sharded projections would
+# force an expensive reshard before every score einsum (verified: SPMD
+# "involuntary full rematerialization" + 4× collective bytes). The weights
+# are small (4·d² vs 3·d·d_ff for the TP'd MLP), so FSDP storage suffices.
+_FSDP_ONLY = ("wq", "wk", "wv", "wo", "w_dkv", "w_kr")
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_spec(
+    path: str, ndim: int, fsdp: tuple[str, ...], *, expert_parallel: bool = False
+) -> P:
+    """PartitionSpec for one parameter leaf (trailing dims; stack handled by caller)."""
+    name = path.split("/")[-1]
+    fs = tuple(fsdp) if len(fsdp) > 1 else fsdp[0] if fsdp else None
+
+    if name == "embed":
+        return P("model", fs)
+    if name == "lm_head":
+        return P(fs, "model")
+    if name in ("e_gate", "e_up"):  # (E, d, f)
+        return P("model", fs, None) if expert_parallel else P(None, fs, "model")
+    if name == "e_down":  # (E, f, d)
+        return P("model", None, fs) if expert_parallel else P(None, "model", fs)
+    if name in ("w_uk", "w_uv"):  # MLA (R, H, hd) — replicated (seq-parallel attn)
+        return P(None, None, None)
+    if name in _FSDP_ONLY:
+        return P(fs, None) if ndim == 2 else P(*([None] * ndim))
+    if name.startswith("r_"):  # sLSTM per-head recurrent (H, hd, hd)
+        return P(None, None, None)
+    if name == "conv_w":  # (cw, w)
+        return P(None, "model")
+    if ndim == 2:
+        if name in _ROW_PARALLEL:
+            return P("model", fs)
+        return P(fs, "model")
+    if ndim == 1:
+        if name in _REPLICATED_1D or name.startswith("b_"):
+            return P(None)
+        return P("model")  # attention biases bq/bk/bv etc.
+    return P(*([None] * ndim))
+
+
+def param_shardings(
+    mesh, params_shape: Any, *, expert_parallel: bool = False
+) -> Any:
+    """Build the NamedSharding pytree for a params (or grads/updates) tree."""
+    fsdp = batch_axes(mesh)
+
+    def axes_size(entry) -> int:
+        if entry is None:
+            return 1
+        names = (entry,) if isinstance(entry, str) else entry
+        n = 1
+        for a in names:
+            n *= mesh.shape[a]
+        return n
+
+    def one(path, leaf):
+        pstr = _path_str(path)
+        ndim = len(leaf.shape)
+        stacked = "/stack/" in f"/{pstr}/" or pstr.startswith("stack/")
+        eff_ndim = ndim - 1 if stacked else ndim
+        spec = param_spec(pstr, eff_ndim, fsdp, expert_parallel=expert_parallel)
+        if stacked:
+            spec = P(None, *spec)
+        if len(spec) < ndim:
+            spec = P(*spec, *([None] * (ndim - len(spec))))
+        # never shard a dim that does not divide its mesh axes (GSPMD would
+        # pad — wasteful and confusing for the roofline numbers)
+        clean = [
+            e if dim % axes_size(e) == 0 else None for e, dim in zip(spec, leaf.shape)
+        ]
+        return NamedSharding(mesh, P(*clean))
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def opt_state_shardings(mesh, opt_state_shape, params_shardings) -> Any:
+    """Adam moments mirror the param shardings; scalars are replicated."""
+
+    def one(path, leaf):
+        # moments live under mu/nu with the same sub-path as params
+        pstr = _path_str(path)
+        if pstr.startswith(("mu/", "nu/")):
+            sub = pstr.split("/", 1)[1]
+            ref = _lookup(params_shardings, sub)
+            if ref is not None:
+                return ref
+        return NamedSharding(mesh, P(*([None] * len(leaf.shape))))
+
+    return jax.tree_util.tree_map_with_path(one, opt_state_shape)
+
+
+def _lookup(tree, path_str: str):
+    node = tree
+    for part in path_str.split("/"):
+        if isinstance(node, dict) and part in node:
+            node = node[part]
+        elif isinstance(node, (list, tuple)) and part.isdigit() and int(part) < len(node):
+            node = node[int(part)]
+        else:
+            return None
+    return node if isinstance(node, NamedSharding) else None
+
+
+# --------------------------------------------------------------------------
+# activations / batches / caches
+# --------------------------------------------------------------------------
+def batch_shardings(mesh, batch_shape: Any) -> Any:
+    """Token batches: shard the leading (global batch) dim over batch axes."""
+    fsdp = batch_axes(mesh)
+    dp = tuple(fsdp) if len(fsdp) > 1 else fsdp[0]
+    n_batch = int(np.prod([mesh.shape[a] for a in fsdp]))
+
+    def one(leaf):
+        if leaf.shape and leaf.shape[0] % n_batch == 0:
+            spec = P(dp, *([None] * (len(leaf.shape) - 1)))
+        else:
+            spec = P(*([None] * len(leaf.shape)))
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map(one, batch_shape)
+
+
+def cache_shardings(mesh, cache_shape: Any, cfg) -> Any:
+    """Decode caches: batch on batch-axes when divisible; else length dim on
+    "model"; kv-head dim on "model" when divisible; recurrent states get
+    (batch, "model") on their width dim."""
+    fsdp = batch_axes(mesh)
+    dp = tuple(fsdp) if len(fsdp) > 1 else fsdp[0]
+    n_batch = int(np.prod([mesh.shape[a] for a in fsdp]))
+    n_model = mesh.shape["model"]
+
+    def one(path, leaf):
+        shape = leaf.shape
+        pstr = _path_str(path)
+        stacked = "/stack/" in f"/{pstr}/" or pstr.startswith("stack/")
+        dims: list = [None] * len(shape)
+        off = 1 if stacked else 0
+        eff = shape[off:]
+        name = pstr.split("/")[-1]
+        if not eff:  # pos scalars
+            return NamedSharding(mesh, P(*dims))
+        # leading effective dim is batch for all cache kinds
+        used_model = False
+        if eff[0] % n_batch == 0 and eff[0] >= n_batch:
+            dims[off] = dp
+        if name in ("k", "v", "ck", "cv") and len(eff) == 4:
+            # length-sharded to match the sequence-parallel decode constraint
+            if eff[1] % n_model == 0:
+                dims[off + 1] = "model"
+                used_model = True
+            elif eff[2] % n_model == 0:  # fall back to kv heads
+                dims[off + 2] = "model"
+                used_model = True
+        elif name in ("c", "k_rope") and len(eff) == 3:
+            if eff[1] % n_model == 0:
+                dims[off + 1] = "model"
+                used_model = True
+        elif len(eff) >= 2 and eff[-1] % n_model == 0:
+            dims[off + len(eff) - 1] = "model"  # recurrent width
+            used_model = True
+        del used_model
+        return NamedSharding(mesh, P(*dims))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def replicated(mesh, tree_shape: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda leaf: NamedSharding(mesh, P(*([None] * len(leaf.shape)))), tree_shape
+    )

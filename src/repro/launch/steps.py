@@ -1,0 +1,154 @@
+"""Jittable step functions + ShapeDtypeStruct input specs per workload shape.
+
+``input_specs(cfg, shape)`` follows the shannon/kernels pattern: weak-type-
+correct ShapeDtypeStructs, shardable, zero device allocation — the dry-run
+lowers against these directly.
+
+Decode shapes lower ``serve_step`` (ONE token against a ``seq_len`` cache).
+``long_500k`` uses the sliding-window decode variant for full-attention
+archs (DESIGN.md §5): the ring cache is ``sliding_window`` long while the
+position counter sits at 524288.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import config as mcfg
+from repro.models import model as mdl
+from repro.models.config import InputShape, ModelConfig
+from repro.optim import adamw, clip_by_global_norm
+from repro.optim.base import Optimizer, apply_updates
+
+
+# --------------------------------------------------------------------------
+# shapes & specs
+# --------------------------------------------------------------------------
+def decode_window_for(cfg: ModelConfig, shape: InputShape) -> int:
+    """Sliding-window decode applies to 'attn' blocks in long_500k only."""
+    has_full_attn = any(m == "attn" for m, _ in cfg.all_blocks)
+    if shape.name == "long_500k" and has_full_attn and cfg.mla is None:
+        return cfg.sliding_window
+    return 0
+
+
+def cache_len_for(cfg: ModelConfig, shape: InputShape) -> int:
+    window = decode_window_for(cfg, shape)
+    return min(shape.seq_len, window) if window else shape.seq_len
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every step input."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    act = jnp.dtype(cfg.dtype)
+    specs: dict[str, Any] = {}
+    if shape.kind == "train":
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        specs["targets"] = jax.ShapeDtypeStruct((b, s), i32)
+    elif shape.kind == "prefill":
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+    else:  # decode
+        specs["token"] = jax.ShapeDtypeStruct((b, 1), i32)
+        cl = cache_len_for(cfg, shape)
+        dw = decode_window_for(cfg, shape)
+        specs["caches"] = jax.eval_shape(
+            lambda: mdl.init_cache(cfg, b, cl, act, decode_window=dw)
+        )
+    if cfg.frontend == "vision" and shape.kind != "decode":
+        specs["vision_embeds"] = jax.ShapeDtypeStruct((b, cfg.n_vision_tokens, cfg.d_model), act)
+    if cfg.frontend == "audio" and shape.kind != "decode":
+        specs["frames"] = jax.ShapeDtypeStruct((b, cfg.encoder.n_frames, cfg.d_model), act)
+    return specs
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda: mdl.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def abstract_train_state(cfg: ModelConfig, opt: Optimizer):
+    params = abstract_params(cfg)
+
+    def mk():
+        p = mdl.init_params(cfg, jax.random.PRNGKey(0))
+        return {"params": p, "opt_state": opt.init(p), "step": jnp.zeros((), jnp.int32)}
+
+    del params
+    return jax.eval_shape(mk)
+
+
+def default_optimizer() -> Optimizer:
+    return adamw(3e-4, weight_decay=0.1)
+
+
+# --------------------------------------------------------------------------
+# steps
+# --------------------------------------------------------------------------
+def make_train_step(cfg: ModelConfig, opt: Optimizer, *, clip_norm: float = 1.0):
+    def train_step(state, batch):
+        def lf(p):
+            return mdl.loss_fn(
+                cfg,
+                p,
+                batch["tokens"],
+                batch["targets"],
+                vision_embeds=batch.get("vision_embeds"),
+                frames=batch.get("frames"),
+            )
+
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(state["params"])
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        updates, opt_state = opt.update(grads, state["opt_state"], state["params"], state["step"])
+        params = apply_updates(state["params"], updates)
+        new_state = {"params": params, "opt_state": opt_state, "step": state["step"] + 1}
+        return new_state, {"loss": loss, "grad_norm": gnorm, **metrics}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, shape: InputShape):
+    b = shape.global_batch
+    cl = shape.seq_len
+
+    def prefill_step(params, batch):
+        caches = mdl.init_cache(cfg, b, cl, jnp.dtype(cfg.dtype))
+        hidden, caches, _ = forward_with_extras(cfg, params, batch, caches)
+        logits = mdl.logits_from_hidden(cfg, params, hidden[:, -1:, :])[:, 0]
+        return logits, caches
+
+    return prefill_step
+
+
+def forward_with_extras(cfg, params, batch, caches):
+    return mdl.forward(
+        cfg,
+        params,
+        batch["tokens"],
+        vision_embeds=batch.get("vision_embeds"),
+        frames=batch.get("frames"),
+        caches=caches,
+    )
+
+
+def make_serve_step(cfg: ModelConfig, shape: InputShape):
+    dw = decode_window_for(cfg, shape)
+
+    def serve_step(params, batch):
+        logits, caches = mdl.decode_step(
+            cfg, params, batch["token"], batch["caches"], decode_window=dw
+        )
+        return logits, caches
+
+    return serve_step
+
+
+def make_step(cfg: ModelConfig, shape: InputShape, opt: Optional[Optimizer] = None):
+    """(step_fn, kind) for an (arch, shape) pair."""
+    if shape.kind == "train":
+        return make_train_step(cfg, opt or default_optimizer()), "train"
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg, shape), "prefill"
+    return make_serve_step(cfg, shape), "decode"

@@ -1,0 +1,73 @@
+"""Synchronous LM trainer driver (single host; production = same step jit'd
+with the production mesh — the dry-run proves that lowering).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --reduced \
+      --steps 100 --batch 8 --seq 64
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.configs import ARCH_NAMES, get_config
+from repro.data.tokens import TokenPipeline
+from repro.launch.steps import make_train_step
+from repro.models import model as mdl
+from repro.optim import adamw, linear_warmup_cosine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES, default="qwen3-0.6b")
+    ap.add_argument("--reduced", action="store_true", help="CPU-sized variant")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--checkpoint", default="")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    opt = adamw(linear_warmup_cosine(args.lr, args.steps // 10 + 1, args.steps))
+    step_fn = jax.jit(make_train_step(cfg, opt), donate_argnums=0)
+
+    params = mdl.init_params(cfg, jax.random.PRNGKey(0))
+    state = {"params": params, "opt_state": opt.init(params), "step": jnp.zeros((), jnp.int32)}
+    pipe = TokenPipeline(cfg.vocab_size, args.batch, args.seq, seed=0)
+
+    extras = {}
+    if cfg.frontend == "vision":
+        extras["vision_embeds"] = jnp.zeros((args.batch, cfg.n_vision_tokens, cfg.d_model), cfg.dtype)
+    if cfg.frontend == "audio":
+        extras["frames"] = jnp.zeros((args.batch, cfg.encoder.n_frames, cfg.d_model), cfg.dtype)
+
+    t0 = time.time()
+    losses = []
+    for i in range(args.steps):
+        b = pipe.next_batch()
+        batch = {"tokens": jnp.asarray(b.tokens), "targets": jnp.asarray(b.targets), **extras}
+        state, metrics = step_fn(state, batch)
+        losses.append(float(metrics["loss"]))
+        if i % args.log_every == 0 or i == args.steps - 1:
+            dt = time.time() - t0
+            print(
+                f"step {i:5d} loss {losses[-1]:.4f} ce {float(metrics['ce']):.4f} "
+                f"gnorm {float(metrics['grad_norm']):.3f} ({dt:.1f}s)",
+                flush=True,
+            )
+    first, last = np.mean(losses[:5]), np.mean(losses[-5:])
+    print(f"loss: first5={first:.4f} last5={last:.4f} (improved: {last < first})")
+    if args.checkpoint:
+        save_checkpoint(args.checkpoint, state, step=args.steps)
+        print(f"checkpoint -> {args.checkpoint}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+from repro.models.config import (
+    INPUT_SHAPES,
+    EncoderConfig,
+    InputShape,
+    MLAConfig,
+    ModelConfig,
+    MoEConfig,
+)
+from repro.models.model import (
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    logits_from_hidden,
+    loss_fn,
+    param_count,
+)
+
+__all__ = [
+    "ModelConfig",
+    "MoEConfig",
+    "MLAConfig",
+    "EncoderConfig",
+    "InputShape",
+    "INPUT_SHAPES",
+    "init_params",
+    "forward",
+    "decode_step",
+    "init_cache",
+    "loss_fn",
+    "logits_from_hidden",
+    "param_count",
+]

@@ -1,0 +1,226 @@
+"""Block init/apply dispatch: (mixer, ffn) pairs with pre-norm residuals.
+
+One block =
+    x = x + mixer(rmsnorm(x))          [+ cross-attention for enc-dec decoders]
+    x = x + ffn(rmsnorm(x))            (ffn may be 'none' — xLSTM blocks)
+
+``block_apply`` runs in two modes: ``full`` (train/prefill — whole sequence,
+builds cache seeds) and ``decode`` (one token against per-block state).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import BlockSpec, ModelConfig
+from repro.models.layers import attention as attn_lib
+from repro.models.layers import mla as mla_lib
+from repro.models.layers import moe as moe_lib
+from repro.models.layers import rglru as rglru_lib
+from repro.models.layers import xlstm as xlstm_lib
+from repro.models.layers.mlp import init_mlp, mlp
+from repro.models.layers.norms import init_rmsnorm, rmsnorm
+
+
+def init_block(cfg: ModelConfig, kind: BlockSpec, key, *, cross: bool = False) -> dict:
+    mixer, ffn = kind
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: dict[str, Any] = {"norm1": init_rmsnorm(cfg.d_model)}
+    if mixer in ("attn", "local", "bidir"):
+        p["attn"] = attn_lib.init_attention(cfg, k1)
+    elif mixer == "mla":
+        p["attn"] = mla_lib.init_mla(cfg, k1)
+    elif mixer == "rglru":
+        p["rec"] = rglru_lib.init_rglru_block(cfg, k1)
+    elif mixer == "mlstm":
+        p["rec"] = xlstm_lib.init_mlstm_block(cfg, k1)
+    elif mixer == "slstm":
+        p["rec"] = xlstm_lib.init_slstm_block(cfg, k1)
+    else:
+        raise ValueError(f"unknown mixer {mixer}")
+    if cross:
+        p["cross_norm"] = init_rmsnorm(cfg.d_model)
+        p["cross"] = attn_lib.init_attention(cfg, k3)
+    if ffn == "mlp":
+        p["ffn_norm"] = init_rmsnorm(cfg.d_model)
+        p["mlp"] = init_mlp(cfg.d_model, cfg.d_ff, k2)
+    elif ffn == "moe":
+        p["ffn_norm"] = init_rmsnorm(cfg.d_model)
+        p["moe"] = moe_lib.init_moe(cfg, k2)
+    return p
+
+
+def init_block_cache(
+    cfg: ModelConfig,
+    kind: BlockSpec,
+    batch: int,
+    cache_len: int,
+    dtype,
+    *,
+    decode_window: int = 0,
+    cross_len: int = 0,
+) -> dict:
+    """Decode-state for one block. ``decode_window`` ring-buffers 'attn' blocks."""
+    mixer, _ = kind
+    cache: dict[str, Any] = {}
+    if mixer in ("attn", "bidir"):
+        length = min(cache_len, decode_window) if decode_window else cache_len
+        cache = attn_lib.init_kv_cache(cfg, batch, length, dtype)
+    elif mixer == "local":
+        cache = attn_lib.init_kv_cache(cfg, batch, min(cache_len, cfg.sliding_window), dtype)
+    elif mixer == "mla":
+        cache = mla_lib.init_mla_cache(cfg, batch, cache_len, dtype)
+    elif mixer == "rglru":
+        cache = rglru_lib.init_rglru_state(cfg, batch, dtype)
+    elif mixer == "mlstm":
+        cache = xlstm_lib.init_mlstm_state(cfg, batch)
+    elif mixer == "slstm":
+        cache = xlstm_lib.init_slstm_state(cfg, batch)
+    if cross_len:
+        kvh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        cache["ck"] = jnp.zeros((batch, cross_len, kvh, hd), dtype)
+        cache["cv"] = jnp.zeros((batch, cross_len, kvh, hd), dtype)
+    return cache
+
+
+def _mixer_window(cfg: ModelConfig, mixer: str, decode_window: int) -> int:
+    if mixer == "local":
+        return cfg.sliding_window
+    if mixer == "attn":
+        return decode_window
+    return 0
+
+
+def block_apply(
+    cfg: ModelConfig,
+    kind: BlockSpec,
+    params: dict,
+    x: jnp.ndarray,
+    *,
+    angles: Optional[jnp.ndarray],
+    mode: str,  # 'full' | 'decode'
+    cache: Optional[dict] = None,
+    enc_out: Optional[jnp.ndarray] = None,
+    decode_window: int = 0,
+) -> tuple[jnp.ndarray, Optional[dict], jnp.ndarray]:
+    """Returns (x, new_cache, aux_loss)."""
+    mixer, ffn = kind
+    aux = jnp.zeros((), jnp.float32)
+    h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+    new_cache = cache
+
+    if mixer in ("attn", "local", "bidir"):
+        window = _mixer_window(cfg, mixer, decode_window)
+        if mode == "full":
+            y, kv = attn_lib.attention_full(
+                cfg, params["attn"], h, angles, window=window, bidirectional=(mixer == "bidir")
+            )
+            if cache is not None:
+                new_cache = dict(cache)
+                new_cache.update(
+                    pack_kv_cache(kv, cache["k"].shape[1], window, cache["k"].dtype)
+                )
+        else:
+            sub = {k: cache[k] for k in ("k", "v", "pos")}
+            y, upd = attn_lib.attention_decode(
+                cfg, params["attn"], h, angles, sub, window=window
+            )
+            new_cache = dict(cache)
+            new_cache.update(upd)
+    elif mixer == "mla":
+        if mode == "full":
+            y, seed = mla_lib.mla_full(cfg, params["attn"], h, angles)
+            if cache is not None:
+                new_cache = dict(cache)
+                s = seed["c"].shape[1]
+                new_cache["c"] = jax.lax.dynamic_update_slice_in_dim(
+                    cache["c"], seed["c"].astype(cache["c"].dtype), 0, axis=1
+                )
+                new_cache["k_rope"] = jax.lax.dynamic_update_slice_in_dim(
+                    cache["k_rope"], seed["k_rope"].astype(cache["k_rope"].dtype), 0, axis=1
+                )
+                new_cache["pos"] = jnp.asarray(s, jnp.int32)
+        else:
+            y, new_cache = mla_lib.mla_decode(cfg, params["attn"], h, angles, cache)
+    elif mixer == "rglru":
+        y, st = rglru_lib.rglru_block(cfg, params["rec"], h, None if mode == "full" else cache)
+        new_cache = st if (cache is not None or mode == "decode") else None
+    elif mixer == "mlstm":
+        y, st = xlstm_lib.mlstm_block(cfg, params["rec"], h, None if mode == "full" else cache)
+        new_cache = st if (cache is not None or mode == "decode") else None
+    elif mixer == "slstm":
+        y, st = xlstm_lib.slstm_block(cfg, params["rec"], h, None if mode == "full" else cache)
+        new_cache = st if (cache is not None or mode == "decode") else None
+    else:
+        raise ValueError(mixer)
+
+    x = x + y
+
+    if "cross" in params:
+        hc = rmsnorm(params["cross_norm"], x, cfg.norm_eps)
+        q, _, _ = attn_lib.qkv(cfg, params["cross"], hc, None)
+        if mode == "full":
+            assert enc_out is not None, "encoder output required for full-mode cross-attn"
+            ck, cv = cross_kv(cfg, params["cross"], enc_out)
+            if new_cache is not None:
+                new_cache = dict(new_cache)
+                new_cache["ck"], new_cache["cv"] = (
+                    ck.astype(new_cache["ck"].dtype),
+                    cv.astype(new_cache["cv"].dtype),
+                )
+        else:
+            ck = cache["ck"].astype(x.dtype)
+            cv = cache["cv"].astype(x.dtype)
+        yc = attn_lib.attend(cfg, q, ck, cv, None)
+        yc = yc @ params["cross"]["wo"].astype(x.dtype)
+        x = x + yc
+
+    if ffn == "mlp":
+        hf = rmsnorm(params["ffn_norm"], x, cfg.norm_eps)
+        x = x + mlp(cfg, params["mlp"], hf)
+    elif ffn == "moe":
+        hf = rmsnorm(params["ffn_norm"], x, cfg.norm_eps)
+        y, aux_moe = moe_lib.moe_ffn(cfg, params["moe"], hf)
+        x = x + y
+        aux = aux + aux_moe
+    return x, new_cache, aux
+
+
+def cross_kv(cfg: ModelConfig, params: dict, enc_out: jnp.ndarray):
+    """Project encoder output to cross-attention k/v (no rope, no qk-norm)."""
+    b, f, _ = enc_out.shape
+    kvh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    dt = enc_out.dtype
+    k = (enc_out @ params["wk"].astype(dt)).reshape(b, f, kvh, hd)
+    v = (enc_out @ params["wv"].astype(dt)).reshape(b, f, kvh, hd)
+    if cfg.qkv_bias:
+        k = k + params["bk"].astype(dt).reshape(kvh, hd)
+        v = v + params["bv"].astype(dt).reshape(kvh, hd)
+    return k, v
+
+
+def pack_kv_cache(kv: dict, cache_len: int, window: int, dtype) -> dict:
+    """Seed a decode cache from prefill k/v (ring-rolled for windowed caches).
+
+    Ring invariant: slot ``p % window`` holds position ``p``. After a prefill
+    of length S the last ``window`` positions S-w..S-1 land at slots
+    ``(S-w+i) % w`` — i.e. the chronological tail rolled by ``S % w``.
+    """
+    k, v = kv["k"], kv["v"]
+    s = k.shape[1]
+    if window and s > window:
+        k, v = k[:, -window:], v[:, -window:]
+        shift = s % window
+        k = jnp.roll(k, shift, axis=1)
+        v = jnp.roll(v, shift, axis=1)
+        pad = 0
+    else:
+        pad = cache_len - k.shape[1]
+    if pad > 0:
+        zeros = lambda u: jnp.concatenate(
+            [u, jnp.zeros((u.shape[0], pad) + u.shape[2:], u.dtype)], axis=1
+        )
+        k, v = zeros(k), zeros(v)
+    return {"k": k.astype(dtype), "v": v.astype(dtype), "pos": jnp.asarray(s, jnp.int32)}

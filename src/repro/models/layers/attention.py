@@ -1,0 +1,191 @@
+"""GQA attention: full / sliding-window, qk-norm, QKV-bias, blockwise option.
+
+All dense archs in the zoo share this module; differences are pure config
+(n_kv_heads, qk_norm, qkv_bias, rope theta / M-RoPE, window). The blockwise
+path (``attn_block_q > 0``) processes query chunks with ``lax.map`` so the
+(S × T) score tensor is never fully materialized — the §Perf memory-term
+lever; numerics are identical (same f32 softmax over the full key axis).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers.norms import rms_head_norm
+from repro.models.layers.rotary import apply_rope
+from repro.models.sharding_hints import constrain
+
+NEG_INF = -2.0e38
+
+
+def init_attention(cfg: ModelConfig, key) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    scale = d**-0.5
+    p = {
+        "wq": (jax.random.normal(k1, (d, h * hd)) * scale).astype(jnp.float32),
+        "wk": (jax.random.normal(k2, (d, kv * hd)) * scale).astype(jnp.float32),
+        "wv": (jax.random.normal(k3, (d, kv * hd)) * scale).astype(jnp.float32),
+        "wo": (jax.random.normal(k4, (h * hd, d)) * (h * hd) ** -0.5).astype(jnp.float32),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((kv * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((kv * hd,), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def qkv(cfg: ModelConfig, params: dict, x: jnp.ndarray, angles: jnp.ndarray):
+    """Project + normalize + rotate. x: (B,S,D) -> q (B,S,H,hd), k/v (B,S,KV,hd)."""
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    wdt = x.dtype
+    q = x @ params["wq"].astype(wdt)
+    k = x @ params["wk"].astype(wdt)
+    v = x @ params["wv"].astype(wdt)
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(wdt)
+        k = k + params["bk"].astype(wdt)
+        v = v + params["bv"].astype(wdt)
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kv, hd)
+    v = v.reshape(b, s, kv, hd)
+    if cfg.qk_norm:
+        q = rms_head_norm(params["q_norm"], q, cfg.norm_eps)
+        k = rms_head_norm(params["k_norm"], k, cfg.norm_eps)
+    if angles is not None:
+        q = apply_rope(q, angles)
+        k = apply_rope(k, angles)
+    return q, k, v
+
+
+def attend(
+    cfg: ModelConfig,
+    q: jnp.ndarray,  # (B, S, H, hd)
+    k: jnp.ndarray,  # (B, T, KV, hd)
+    v: jnp.ndarray,  # (B, T, KV, hd)
+    mask: Optional[jnp.ndarray],  # (S, T) or (B, S, T) bool, True = attend
+) -> jnp.ndarray:
+    """Grouped-query scaled dot-product attention, f32 softmax."""
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, s, kvh, g, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k).astype(jnp.float32) * (hd**-0.5)
+    # Sequence-parallel TP: shard scores over query-seq (full pass) or over
+    # the key/cache dim (decode, s == 1) — head counts in the zoo don't
+    # divide the model axis uniformly, sequence dims always do.
+    if s > 1:
+        scores = constrain(scores, "dp", None, None, "model", None)
+    else:
+        scores = constrain(scores, "dp", None, None, None, "model")
+    if cfg.logit_softcap:
+        scores = cfg.logit_softcap * jnp.tanh(scores / cfg.logit_softcap)
+    if mask is not None:
+        m = mask if mask.ndim == 3 else mask[None]
+        scores = jnp.where(m[:, None, None, :, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", p, v)
+    out = constrain(out, "dp", "model" if s > 1 else None, None, None, None)
+    return out.reshape(b, s, h * hd)
+
+
+def causal_mask(s: int, t: int, offset: int, window: int = 0) -> jnp.ndarray:
+    """(s, t) mask; query i sits at absolute position offset + i.
+
+    ``window > 0`` additionally bounds lookback (sliding window): key j is
+    visible iff q_pos - window < j <= q_pos.
+    """
+    q_pos = offset + jnp.arange(s)[:, None]
+    k_pos = jnp.arange(t)[None, :]
+    m = k_pos <= q_pos
+    if window > 0:
+        m &= k_pos > q_pos - window
+    return m
+
+
+def attention_full(
+    cfg: ModelConfig,
+    params: dict,
+    x: jnp.ndarray,
+    angles: jnp.ndarray,
+    *,
+    window: int = 0,
+    bidirectional: bool = False,
+) -> tuple[jnp.ndarray, dict]:
+    """Training/prefill attention over the whole sequence.
+
+    Returns (output (B,S,D), kv dict for cache construction).
+    """
+    b, s, _ = x.shape
+    q, k, v = qkv(cfg, params, x, angles)
+    mask = None if bidirectional else causal_mask(s, s, 0, window)
+
+    block_q = cfg.attn_block_q
+    if block_q and s % block_q == 0 and s > block_q:
+        # Static python loop over query blocks (so dry-run cost analysis
+        # counts every block; XLA counts while bodies once). Each block only
+        # materializes (bq × T) scores; with remat the backward recomputes.
+        n_blocks = s // block_q
+
+        @jax.checkpoint
+        def one_block(qi, off):
+            mi = None if bidirectional else causal_mask(block_q, s, off, window)
+            return attend(cfg, qi, k, v, mi)
+
+        outs = [
+            one_block(q[:, i * block_q : (i + 1) * block_q], i * block_q)
+            for i in range(n_blocks)
+        ]
+        out = jnp.concatenate(outs, axis=1)
+    else:
+        out = attend(cfg, q, k, v, mask)
+
+    y = out @ params["wo"].astype(x.dtype)
+    return y, {"k": k, "v": v}
+
+
+def attention_decode(
+    cfg: ModelConfig,
+    params: dict,
+    x: jnp.ndarray,  # (B, 1, D)
+    angles: jnp.ndarray,  # (1, hd//2) for the current position
+    cache: dict,  # {"k": (B, C, KV, hd), "v": ..., "pos": scalar int32}
+    *,
+    window: int = 0,
+) -> tuple[jnp.ndarray, dict]:
+    """Single-token decode against a (possibly ring-buffered) KV cache.
+
+    ``window > 0`` means the cache is a ring buffer of that length; the new
+    entry lands at ``pos % window`` and all slots are attendable (positions
+    differ by < window by construction). For full caches the new entry lands
+    at ``pos`` and slots ``> pos`` are masked out.
+    """
+    q, k_new, v_new = qkv(cfg, params, x, angles)
+    cache_len = cache["k"].shape[1]
+    pos = cache["pos"]
+    slot = pos % window if window > 0 else pos
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
+    # Valid slots: before the ring fills (or for full caches, always) only
+    # entries written so far are attendable; a full ring is wholly visible.
+    mask = (jnp.arange(cache_len) <= pos)[None, :]  # (1, C)
+    out = attend(cfg, q, k.astype(x.dtype), v.astype(x.dtype), mask)
+    y = out @ params["wo"].astype(x.dtype)
+    return y, {"k": k, "v": v, "pos": pos + 1}
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype) -> dict:
+    kvh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, cache_len, kvh, hd), dtype),
+        "v": jnp.zeros((batch, cache_len, kvh, hd), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }

@@ -1,0 +1,146 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+KV activations are compressed into a shared ``kv_lora_rank`` latent ``c``
+plus one shared rotary key head; per-head keys/values are up-projected from
+``c``. The decode cache stores only ``(c, k_rope)`` — 576 dims/token for the
+assigned config versus 16·2·128 = 4096 for vanilla GQA — MLA *is* the
+sub-quadratic-memory mechanism that lets deepseek run ``long_500k``.
+
+Two decode paths:
+  * ``naive``  — re-expand k/v from the cached latent every step
+    (paper-faithful formulation, O(T · kv_lora · H · hd) per token);
+  * ``absorbed`` — fold W_UK into the query and W_UV into the output so
+    attention runs directly in latent space (the §Perf beyond-baseline
+    variant; same math, O(T · kv_lora) per token per head).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers.attention import NEG_INF, causal_mask
+from repro.models.layers.norms import init_rmsnorm, rmsnorm
+from repro.models.layers.rotary import apply_rope
+from repro.models.sharding_hints import constrain
+
+
+def init_mla(cfg: ModelConfig, key) -> dict:
+    mla = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qd = mla.nope_head_dim + mla.rope_head_dim
+    ks = jax.random.split(key, 6)
+    s = d**-0.5
+    sl = mla.kv_lora_rank**-0.5
+    return {
+        "wq": (jax.random.normal(ks[0], (d, h * qd)) * s).astype(jnp.float32),
+        "w_dkv": (jax.random.normal(ks[1], (d, mla.kv_lora_rank)) * s).astype(jnp.float32),
+        "w_kr": (jax.random.normal(ks[2], (d, mla.rope_head_dim)) * s).astype(jnp.float32),
+        "kv_norm": init_rmsnorm(mla.kv_lora_rank),
+        "w_uk": (
+            jax.random.normal(ks[3], (mla.kv_lora_rank, h, mla.nope_head_dim)) * sl
+        ).astype(jnp.float32),
+        "w_uv": (
+            jax.random.normal(ks[4], (mla.kv_lora_rank, h, mla.v_head_dim)) * sl
+        ).astype(jnp.float32),
+        "wo": (
+            jax.random.normal(ks[5], (h * mla.v_head_dim, d)) * (h * mla.v_head_dim) ** -0.5
+        ).astype(jnp.float32),
+    }
+
+
+def _mla_q(cfg: ModelConfig, params: dict, x: jnp.ndarray, angles: jnp.ndarray):
+    mla = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    qd = mla.nope_head_dim + mla.rope_head_dim
+    q = (x @ params["wq"].astype(x.dtype)).reshape(b, s, h, qd)
+    q_nope, q_rope = q[..., : mla.nope_head_dim], q[..., mla.nope_head_dim :]
+    q_rope = apply_rope(q_rope, angles)
+    return q_nope, q_rope
+
+
+def _mla_latent(cfg: ModelConfig, params: dict, x: jnp.ndarray, angles: jnp.ndarray):
+    """Compressed latent + shared rotary key. c (B,S,R); k_rope (B,S,rd)."""
+    c = rmsnorm(params["kv_norm"], x @ params["w_dkv"].astype(x.dtype), cfg.norm_eps)
+    k_rope = x @ params["w_kr"].astype(x.dtype)  # single shared head
+    k_rope = apply_rope(k_rope[:, :, None, :], angles)[:, :, 0, :]
+    return c, k_rope
+
+
+def _mla_attend(cfg, q_nope, q_rope, k_nope, k_rope, v, mask):
+    """q_nope (B,S,H,nd), k_nope (B,T,H,nd), k_rope (B,T,rd) shared head."""
+    mla = cfg.mla
+    scale = (mla.nope_head_dim + mla.rope_head_dim) ** -0.5
+    scores = jnp.einsum("bshd,bthd->bhst", q_nope, k_nope).astype(jnp.float32)
+    scores = scores + jnp.einsum("bshd,btd->bhst", q_rope, k_rope).astype(jnp.float32)
+    scores = scores * scale
+    # sequence-parallel TP (see attention.py): query-seq for full, cache for decode
+    if scores.shape[2] > 1:
+        scores = constrain(scores, "dp", None, "model", None)
+    else:
+        scores = constrain(scores, "dp", None, None, "model")
+    if mask is not None:
+        scores = jnp.where(mask[:, None] if mask.ndim == 3 else mask[None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhst,bthd->bshd", p, v)
+
+
+def mla_full(cfg: ModelConfig, params: dict, x: jnp.ndarray, angles: jnp.ndarray):
+    """Training/prefill. Returns (y, cache seed {c, k_rope})."""
+    mla = cfg.mla
+    b, s, _ = x.shape
+    q_nope, q_rope = _mla_q(cfg, params, x, angles)
+    c, k_rope = _mla_latent(cfg, params, x, angles)
+    k_nope = jnp.einsum("btr,rhd->bthd", c, params["w_uk"].astype(x.dtype))
+    v = jnp.einsum("btr,rhd->bthd", c, params["w_uv"].astype(x.dtype))
+    out = _mla_attend(cfg, q_nope, q_rope, k_nope, k_rope, v, causal_mask(s, s, 0))
+    y = out.reshape(b, s, -1) @ params["wo"].astype(x.dtype)
+    return y, {"c": c, "k_rope": k_rope}
+
+
+def mla_decode(cfg: ModelConfig, params: dict, x: jnp.ndarray, angles, cache: dict):
+    """Single-token decode against the compressed cache {c, k_rope, pos}."""
+    mla = cfg.mla
+    b = x.shape[0]
+    pos = cache["pos"]
+    q_nope, q_rope = _mla_q(cfg, params, x, angles)
+    c_new, kr_new = _mla_latent(cfg, params, x, angles)
+    c = jax.lax.dynamic_update_slice_in_dim(cache["c"], c_new.astype(cache["c"].dtype), pos, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), pos, axis=1
+    )
+    t = c.shape[1]
+    mask = (jnp.arange(t) <= pos)[None, :]
+    cdt = c.astype(x.dtype)
+
+    if mla.decode_mode == "absorbed":
+        # fold W_UK into q, W_UV into the output: attention in latent space
+        scale = (mla.nope_head_dim + mla.rope_head_dim) ** -0.5
+        q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, params["w_uk"].astype(x.dtype))
+        scores = jnp.einsum("bshr,btr->bhst", q_lat, cdt).astype(jnp.float32)
+        scores = scores + jnp.einsum(
+            "bshd,btd->bhst", q_rope, k_rope.astype(x.dtype)
+        ).astype(jnp.float32)
+        scores = scores * scale
+        scores = constrain(scores, "dp", None, None, "model")
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+        p = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        lat_out = jnp.einsum("bhst,btr->bshr", p, cdt)  # (B,1,H,R)
+        out = jnp.einsum("bshr,rhd->bshd", lat_out, params["w_uv"].astype(x.dtype))
+    else:
+        k_nope = jnp.einsum("btr,rhd->bthd", cdt, params["w_uk"].astype(x.dtype))
+        v = jnp.einsum("btr,rhd->bthd", cdt, params["w_uv"].astype(x.dtype))
+        out = _mla_attend(cfg, q_nope, q_rope, k_nope, k_rope.astype(x.dtype), v, mask)
+
+    y = out.reshape(b, 1, -1) @ params["wo"].astype(x.dtype)
+    return y, {"c": c, "k_rope": k_rope, "pos": pos + 1}
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype) -> dict:
+    mla = cfg.mla
+    return {
+        "c": jnp.zeros((batch, cache_len, mla.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, cache_len, mla.rope_head_dim), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }

@@ -1,0 +1,32 @@
+"""Gated (SwiGLU/GeGLU) and plain MLP blocks."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+ACTS = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}
+
+
+def init_mlp(d_model: int, d_ff: int, key, *, gated: bool = True) -> dict:
+    ks = jax.random.split(key, 3)
+    s_in, s_out = d_model**-0.5, d_ff**-0.5
+    p = {
+        "w_up": (jax.random.normal(ks[0], (d_model, d_ff)) * s_in).astype(jnp.float32),
+        "w_down": (jax.random.normal(ks[1], (d_ff, d_model)) * s_out).astype(jnp.float32),
+    }
+    if gated:
+        p["w_gate"] = (jax.random.normal(ks[2], (d_model, d_ff)) * s_in).astype(jnp.float32)
+    return p
+
+
+def mlp(cfg: ModelConfig, params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    act = ACTS[cfg.act]
+    dt = x.dtype
+    up = x @ params["w_up"].astype(dt)
+    if "w_gate" in params:
+        up = act(x @ params["w_gate"].astype(dt)) * up
+    else:
+        up = act(up)
+    return up @ params["w_down"].astype(dt)

@@ -1,0 +1,37 @@
+"""Normalization layers (functional)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def init_rmsnorm(dim: int) -> dict:
+    return {"scale": jnp.ones((dim,), jnp.float32)}
+
+
+def rmsnorm(params: dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 / jnp.sqrt(var + eps)
+    return (out * params["scale"]).astype(dtype)
+
+
+def init_layernorm(dim: int) -> dict:
+    return {"scale": jnp.ones((dim,), jnp.float32), "bias": jnp.zeros((dim,), jnp.float32)}
+
+
+def layernorm(params: dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mean = x32.mean(axis=-1, keepdims=True)
+    var = x32.var(axis=-1, keepdims=True)
+    out = (x32 - mean) / jnp.sqrt(var + eps)
+    return (out * params["scale"] + params["bias"]).astype(dtype)
+
+
+def rms_head_norm(scale: jnp.ndarray, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """Per-head RMS norm over the trailing head_dim (Qwen3 qk-norm)."""
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 / jnp.sqrt(var + eps) * scale).astype(dtype)

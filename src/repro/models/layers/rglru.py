@@ -1,0 +1,129 @@
+"""RG-LRU recurrence + temporal conv (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+The Real-Gated Linear Recurrent Unit:
+
+    r_t = sigmoid(x_t W_r + b_r)              (recurrence gate)
+    i_t = sigmoid(x_t W_i + b_i)              (input gate)
+    a_t = exp(-c * softplus(Λ) * r_t)         (diagonal decay, c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+A *diagonal linear* recurrence with input-dependent coefficients — on TPU we
+evaluate training/prefill with ``jax.lax.associative_scan`` (log-depth, no
+sequential bottleneck; this is the TPU-native adaptation of the paper's
+CUDA linear-scan kernel) and decode with the O(1) single-step update.
+
+The recurrent block wraps the RG-LRU with the Griffin structure:
+x → (linear → conv1d(width 4) → RG-LRU) ⊙ gelu(linear) → out-proj.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+_A_SCALE = 8.0
+
+
+def init_rglru_block(cfg: ModelConfig, key) -> dict:
+    d = cfg.d_model
+    w = cfg.lru_width or cfg.d_model
+    cw = cfg.rglru_conv_width
+    ks = jax.random.split(key, 6)
+    s = d**-0.5
+    return {
+        "w_x": (jax.random.normal(ks[0], (d, w)) * s).astype(jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (d, w)) * s).astype(jnp.float32),
+        "conv_w": (jax.random.normal(ks[2], (cw, w)) * cw**-0.5).astype(jnp.float32),
+        "conv_b": jnp.zeros((w,), jnp.float32),
+        "w_r": (jax.random.normal(ks[3], (w, w)) * w**-0.5).astype(jnp.float32),
+        "b_r": jnp.zeros((w,), jnp.float32),
+        "w_i": (jax.random.normal(ks[4], (w, w)) * w**-0.5).astype(jnp.float32),
+        "b_i": jnp.zeros((w,), jnp.float32),
+        # Λ parametrized so a ~ U(0.9, 0.999)-ish at init
+        "lam": jnp.log(jnp.expm1(jnp.linspace(0.001, 0.1, w)) ) .astype(jnp.float32),
+        "w_out": (jax.random.normal(ks[5], (w, d)) * w**-0.5).astype(jnp.float32),
+    }
+
+
+def _rglru_coeffs(params: dict, x: jnp.ndarray):
+    """Gate computation shared by scan and step. x: (..., w)."""
+    dt = jnp.float32
+    xf = x.astype(dt)
+    r = jax.nn.sigmoid(xf @ params["w_r"] + params["b_r"])
+    i = jax.nn.sigmoid(xf @ params["w_i"] + params["b_i"])
+    log_a = -_A_SCALE * jax.nn.softplus(params["lam"]) * r  # (..., w), <= 0
+    a = jnp.exp(log_a)
+    gated_x = i * xf
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta * gated_x
+
+
+def rglru_scan(params: dict, x: jnp.ndarray, h0: jnp.ndarray | None = None) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Parallel evaluation over (B, S, w) via associative scan; returns (y, h_last)."""
+    a, b = _rglru_coeffs(params, x)  # (B, S, w) each
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    if h0 is not None:
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0.astype(b.dtype))
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1, :]
+
+
+def rglru_step(params: dict, x_t: jnp.ndarray, h_prev: jnp.ndarray) -> jnp.ndarray:
+    """Decode step: x_t (B, w), h_prev (B, w) -> h_t (B, w) in f32."""
+    a, b = _rglru_coeffs(params, x_t)
+    return a * h_prev.astype(jnp.float32) + b
+
+
+def conv1d_causal(params: dict, x: jnp.ndarray, tail: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Depthwise causal temporal conv. x (B,S,w); tail (B,cw-1,w) history."""
+    cw = params["conv_w"].shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * params["conv_w"][i].astype(x.dtype)
+        for i in range(cw)
+    )
+    return out + params["conv_b"].astype(x.dtype)
+
+
+def rglru_block(cfg: ModelConfig, params: dict, x: jnp.ndarray, state: dict | None):
+    """Full Griffin recurrent block.
+
+    state = {"h": (B,w) f32, "conv": (B,cw-1,w)} or None for training.
+    Returns (y (B,S,D), new_state).
+    """
+    dt = x.dtype
+    main = x @ params["w_x"].astype(dt)
+    gate = jax.nn.gelu(x @ params["w_gate"].astype(dt))
+    if state is None:
+        conv_out = conv1d_causal(params, main)
+        h, h_last = rglru_scan(params, conv_out)
+        new_state = {
+            "h": h_last.astype(jnp.float32),
+            "conv": main[:, -(cfg.rglru_conv_width - 1) :, :],
+        }
+    else:
+        conv_out = conv1d_causal(params, main, tail=state["conv"])
+        h_t = rglru_step(params, conv_out[:, 0, :], state["h"])
+        h = h_t[:, None, :].astype(dt)
+        new_state = {
+            "h": h_t,
+            "conv": jnp.concatenate([state["conv"][:, 1:, :], main], axis=1),
+        }
+    y = (h.astype(dt) * gate) @ params["w_out"].astype(dt)
+    return y, new_state
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.rglru_conv_width - 1, w), dtype),
+    }

@@ -1,0 +1,60 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE.
+
+M-RoPE splits the head_dim frequency bands into (temporal, height, width)
+sections, each rotated by its own position stream. For pure-text tokens the
+three streams coincide (t = h = w = token index), which is exactly how
+Qwen2-VL treats text — so the text-only backbone uses the *mechanism*
+faithfully while the vision stub supplies only embeddings.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies for each rotation pair, shape (head_dim//2,)."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def rope_angles(positions: jnp.ndarray, head_dim: int, theta: float) -> jnp.ndarray:
+    """positions (...,) -> angles (..., head_dim//2) in float32."""
+    inv = rope_freqs(head_dim, theta)
+    return positions.astype(jnp.float32)[..., None] * inv
+
+
+def mrope_angles(
+    positions: jnp.ndarray, head_dim: int, theta: float, sections: tuple[int, int, int]
+) -> jnp.ndarray:
+    """M-RoPE: positions (3, ...) t/h/w streams -> angles (..., head_dim//2).
+
+    ``sections`` counts rotation *pairs* per stream and must sum to
+    head_dim // 2.
+    """
+    if sum(sections) != head_dim // 2:
+        raise ValueError(f"mrope sections {sections} must sum to head_dim//2 = {head_dim // 2}")
+    inv = rope_freqs(head_dim, theta)  # (head_dim//2,)
+    stream_of = jnp.repeat(
+        jnp.arange(3), jnp.array(sections), total_repeat_length=head_dim // 2
+    )
+    pos = positions.astype(jnp.float32)  # (3, ...)
+    pos_per_band = jnp.take(pos, stream_of, axis=0)  # (hd//2 bands pick their stream)
+    # pos_per_band: (hd//2, ...) -> move band axis last
+    pos_per_band = jnp.moveaxis(pos_per_band, 0, -1)
+    return pos_per_band * inv
+
+
+def apply_rope(x: jnp.ndarray, angles: jnp.ndarray) -> jnp.ndarray:
+    """Rotate pairs. x: (..., S, n_heads, head_dim); angles: (..., S, head_dim//2).
+
+    Pairs are (x[2i], x[2i+1]) — interleaved convention.
+    """
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    x1 = x32[..., 0::2]
+    x2 = x32[..., 1::2]
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    r1 = x1 * cos - x2 * sin
+    r2 = x1 * sin + x2 * cos
+    out = jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+    return out.astype(dtype)

@@ -1,0 +1,349 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+arXiv:2405.04517. TPU adaptation notes:
+
+* mLSTM's matrix-memory recurrence is evaluated in its *parallel* form for
+  training/prefill — a decay-masked attention-like quadratic form that maps
+  straight onto the MXU — and in its O(1) recurrent form for decode
+  (state C ∈ R^{h×d×d}). Exponential gating is stabilized with the running
+  max ``m`` exactly as in the paper.
+* sLSTM has genuine recurrent connections (block-diagonal R per head), so
+  it cannot be parallelized over time; we run a ``lax.scan`` — on TPU this
+  is the honest structure (the paper's CUDA kernel fuses the same sequential
+  dependency).
+* The causal-conv front of the official blocks is omitted (noted in
+  DESIGN.md); projection/gating structure follows the paper.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.sharding_hints import constrain
+
+
+# --------------------------------------------------------------------------
+# mLSTM
+# --------------------------------------------------------------------------
+def _mlstm_dims(cfg: ModelConfig) -> tuple[int, int]:
+    d_in = int(cfg.d_model * cfg.mlstm_proj_factor)
+    return d_in, d_in // cfg.n_heads
+
+
+def init_mlstm_block(cfg: ModelConfig, key) -> dict:
+    d = cfg.d_model
+    d_in, hd = _mlstm_dims(cfg)
+    h = cfg.n_heads
+    ks = jax.random.split(key, 8)
+    s, si = d**-0.5, d_in**-0.5
+    return {
+        "w_up": (jax.random.normal(ks[0], (d, d_in)) * s).astype(jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (d, d_in)) * s).astype(jnp.float32),
+        "wq": (jax.random.normal(ks[2], (d_in, d_in)) * si).astype(jnp.float32),
+        "wk": (jax.random.normal(ks[3], (d_in, d_in)) * si).astype(jnp.float32),
+        "wv": (jax.random.normal(ks[4], (d_in, d_in)) * si).astype(jnp.float32),
+        "w_i": (jax.random.normal(ks[5], (d_in, h)) * si).astype(jnp.float32),
+        "b_i": jnp.zeros((h,), jnp.float32),
+        "w_f": (jax.random.normal(ks[6], (d_in, h)) * si).astype(jnp.float32),
+        "b_f": jnp.full((h,), 3.0, jnp.float32),  # forget-gate bias init
+        "out_norm": jnp.ones((hd,), jnp.float32),
+        "w_down": (jax.random.normal(ks[7], (d_in, d)) * si).astype(jnp.float32),
+    }
+
+
+def _mlstm_qkv_gates(cfg: ModelConfig, params: dict, z: jnp.ndarray):
+    """z: (B, S, d_in) -> q,k,v (B,S,H,hd); i,f pre-activations (B,S,H) f32."""
+    b, s, d_in = z.shape
+    h = cfg.n_heads
+    hd = d_in // h
+    dt = z.dtype
+    q = (z @ params["wq"].astype(dt)).reshape(b, s, h, hd)
+    k = (z @ params["wk"].astype(dt)).reshape(b, s, h, hd)
+    v = (z @ params["wv"].astype(dt)).reshape(b, s, h, hd)
+    zf = z.astype(jnp.float32)
+    i_pre = zf @ params["w_i"] + params["b_i"]
+    f_pre = zf @ params["w_f"] + params["b_f"]
+    return q, k, v, i_pre, f_pre
+
+
+def _head_rmsnorm(scale: jnp.ndarray, x: jnp.ndarray, eps: float) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 / jnp.sqrt(var + eps) * scale).astype(x.dtype)
+
+
+def mlstm_parallel(cfg: ModelConfig, params: dict, z: jnp.ndarray):
+    """Stabilized parallel (quadratic) mLSTM over the full sequence.
+
+    Returns (output (B,S,d_in), final recurrent state) — the state equals
+    what the step recurrence would produce after S steps (same stabilizer),
+    so prefill can seed decode.
+
+    ``cfg.attn_block_q > 0`` evaluates the quadratic form in query-row
+    blocks (static python loop): the (B,S,S,H) decay/score tensors shrink
+    to (B,bq,S,H) — the §Perf memory lever for mLSTM prefill, numerics
+    identical (each row block sees the full key axis).
+    """
+    q, k, v, i_pre, f_pre = _mlstm_qkv_gates(cfg, params, z)
+    b, s, h, hd = q.shape
+    log_f = jax.nn.log_sigmoid(f_pre)  # (B,S,H)
+    F = jnp.cumsum(log_f, axis=1)  # (B,S,H) cumulative log forget
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    def rows(q_blk, F_blk, off, bq):
+        """Row block of the stabilized decay-weighted attention."""
+        # D̃[t, τ] = F_t - F_τ + ĩ_τ  for τ <= t
+        Dt = F_blk[:, :, None, :] - F[:, None, :, :] + i_pre[:, None, :, :]  # (B,bq,S,H)
+        Dt = constrain(Dt, "dp", "model", None, None)  # sequence-parallel TP
+        t_pos = off + jnp.arange(bq)[:, None]
+        causal = jnp.arange(s)[None, :] <= t_pos
+        Dt = jnp.where(causal[None, :, :, None], Dt, -jnp.inf)
+        m = jnp.max(Dt, axis=2)  # (B,bq,H)
+        D = jnp.exp(Dt - m[:, :, None, :])
+        scores = jnp.einsum("bshd,bthd->bsth", q_blk.astype(jnp.float32), kf)
+        scores = constrain(scores, "dp", "model", None, None)
+        scores = scores * (hd**-0.5) * D
+        norm = jnp.maximum(jnp.abs(scores.sum(axis=2)), jnp.exp(-m))
+        return jnp.einsum("bsth,bthd->bshd", scores / norm[:, :, None, :], vf)
+
+    bq = cfg.attn_block_q
+    if bq and s > bq and s % bq == 0:
+        blk = jax.checkpoint(lambda qb, Fb, off: rows(qb, Fb, off, bq))
+        out = jnp.concatenate(
+            [
+                blk(q[:, i * bq : (i + 1) * bq], F[:, i * bq : (i + 1) * bq], i * bq)
+                for i in range(s // bq)
+            ],
+            axis=1,
+        )
+    else:
+        out = rows(q, F, 0, s)
+    out = _head_rmsnorm(params["out_norm"], out.astype(z.dtype), cfg.norm_eps)
+
+    # final state: w_τ = F_S - F_τ + ĩ_τ, m_S = max_τ w_τ  (matches the
+    # step recurrence by induction on m_t = max(log f_t + m_{t-1}, ĩ_t))
+    w = F[:, -1:, :] - F + i_pre  # (B,S,H)
+    m_last = w.max(axis=1)  # (B,H)
+    e = jnp.exp(w - m_last[:, None, :])  # (B,S,H)
+    k_sc = k.astype(jnp.float32) * (hd**-0.5)
+    C = jnp.einsum("bth,bthd,bthk->bhdk", e, v.astype(jnp.float32), k_sc)
+    n = jnp.einsum("bth,bthd->bhd", e, k_sc)
+    state = {"C": C, "n": n, "m": m_last}
+    return out.reshape(b, s, h * hd), state
+
+
+def mlstm_chunkwise(cfg: ModelConfig, params: dict, z: jnp.ndarray, chunk: int):
+    """Chunkwise-recurrent mLSTM: parallel within chunks, O(1) recurrent
+    state between chunks — O(S·chunk·d) instead of O(S²·d) (§Perf variant;
+    the TPU-native adaptation of xLSTM's chunkwise kernel). Exactly matches
+    the parallel form (same stabilized arithmetic; property-tested).
+
+    Static python loop over chunks (dry-run cost accounting, see model.py).
+    """
+    q, k, v, i_pre, f_pre = _mlstm_qkv_gates(cfg, params, z)
+    b, s, h, hd = q.shape
+    assert s % chunk == 0, "pad sequence to a chunk multiple"
+    log_f = jax.nn.log_sigmoid(f_pre)  # (B,S,H)
+    qf, kf, vf = (u.astype(jnp.float32) for u in (q, k, v))
+    k_sc = kf * (hd**-0.5)
+
+    C = jnp.zeros((b, h, hd, hd), jnp.float32)
+    n = jnp.zeros((b, h, hd), jnp.float32)
+    m_run = jnp.full((b, h), -1e30, jnp.float32)
+    outs = []
+    for c0 in range(0, s, chunk):
+        sl = slice(c0, c0 + chunk)
+        lf = log_f[:, sl]  # (B,L,H)
+        ip = i_pre[:, sl]
+        F = jnp.cumsum(lf, axis=1)  # local cumulative log-forget
+        # intra-chunk decay D̃[t,τ] = F_t - F_τ + ĩ_τ (τ <= t)
+        Dt = F[:, :, None, :] - F[:, None, :, :] + ip[:, None, :, :]  # (B,L,L,H)
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+        Dt = jnp.where(causal[None, :, :, None], Dt, -jnp.inf)
+        # inter-chunk decay: state enters token t with weight F_t + m_run
+        w_in = F + m_run[:, None, :]  # (B,L,H)
+        m_t = jnp.maximum(jnp.max(Dt, axis=2), w_in)  # (B,L,H)
+        D = jnp.exp(Dt - m_t[:, :, None, :])
+        e_in = jnp.exp(w_in - m_t)  # (B,L,H)
+
+        qc, kc, vc = qf[:, sl], k_sc[:, sl], vf[:, sl]
+        scores = jnp.einsum("bshd,bthd->bsth", qc, kc) * D  # (B,L,L,H)
+        num = jnp.einsum("bsth,bthd->bshd", scores, vc)
+        num = num + e_in[..., None] * jnp.einsum("bhdk,bshk->bshd", C, qc)
+        den = scores.sum(axis=2) + e_in * jnp.einsum("bhk,bshk->bsh", n, qc)
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-m_t))
+        outs.append((num / den[..., None]).astype(z.dtype))
+
+        # state update across the chunk (same stabilizer algebra)
+        F_L = F[:, -1, :]  # (B,H) total log-forget of the chunk
+        w_tau = F_L[:, None, :] - F + ip  # (B,L,H): decay from τ to chunk end
+        m_new = jnp.maximum(F_L + m_run, jnp.max(w_tau, axis=1))
+        e_tau = jnp.exp(w_tau - m_new[:, None, :])  # (B,L,H)
+        carry = jnp.exp(F_L + m_run - m_new)  # (B,H)
+        C = carry[..., None, None] * C + jnp.einsum("bth,bthd,bthk->bhdk", e_tau, vc, kc)
+        n = carry[..., None] * n + jnp.einsum("bth,bthd->bhd", e_tau, kc)
+        m_run = m_new
+
+    out = jnp.concatenate(outs, axis=1)  # (B,S,H,hd)
+    out = _head_rmsnorm(params["out_norm"], out, cfg.norm_eps)
+    return out.reshape(b, s, h * hd), {"C": C, "n": n, "m": m_run}
+
+
+def mlstm_step(cfg: ModelConfig, params: dict, z_t: jnp.ndarray, state: dict):
+    """Recurrent decode step. z_t (B, 1, d_in); state {C,n,m}."""
+    q, k, v, i_pre, f_pre = _mlstm_qkv_gates(cfg, params, z_t)
+    b, _, h, hd = q.shape
+    q, k, v = (u[:, 0].astype(jnp.float32) for u in (q, k, v))  # (B,H,hd)
+    i_pre, f_pre = i_pre[:, 0], f_pre[:, 0]  # (B,H)
+    log_f = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(log_f + state["m"], i_pre)
+    f_sc = jnp.exp(log_f + state["m"] - m_new)[..., None]
+    i_sc = jnp.exp(i_pre - m_new)[..., None]
+    k_sc = k * (hd**-0.5)
+    C = f_sc[..., None] * state["C"] + i_sc[..., None] * (v[..., :, None] * k_sc[..., None, :])
+    n = f_sc * state["n"] + i_sc * k_sc
+    num = jnp.einsum("bhdk,bhk->bhd", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)), jnp.exp(-m_new))
+    out = (num / den[..., None]).astype(z_t.dtype)  # (B,H,hd)
+    out = _head_rmsnorm(params["out_norm"], out, cfg.norm_eps)
+    return out.reshape(b, 1, h * hd), {"C": C, "n": n, "m": m_new}
+
+
+def mlstm_block(cfg: ModelConfig, params: dict, x: jnp.ndarray, state: dict | None):
+    dt = x.dtype
+    z = x @ params["w_up"].astype(dt)
+    gate = jax.nn.silu(x @ params["w_gate"].astype(dt))
+    if state is None:
+        chunk = cfg.mlstm_chunk
+        if chunk and x.shape[1] > chunk and x.shape[1] % chunk == 0:
+            cell, new_state = mlstm_chunkwise(cfg, params, z, chunk)
+        else:
+            cell, new_state = mlstm_parallel(cfg, params, z)
+    else:
+        cell, new_state = mlstm_step(cfg, params, z, state)
+    y = (cell * gate) @ params["w_down"].astype(dt)
+    return y, new_state
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> dict:
+    d_in, hd = _mlstm_dims(cfg)
+    h = cfg.n_heads
+    return {
+        "C": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, h, hd), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+    }
+
+
+# --------------------------------------------------------------------------
+# sLSTM
+# --------------------------------------------------------------------------
+def _slstm_dims(cfg: ModelConfig) -> tuple[int, int]:
+    h = cfg.n_heads
+    d_in = int(cfg.d_model * cfg.slstm_proj_factor)
+    d_in = (d_in // h) * h  # divisible by heads
+    return d_in, d_in // h
+
+
+def init_slstm_block(cfg: ModelConfig, key) -> dict:
+    d = cfg.d_model
+    d_in, hd = _slstm_dims(cfg)
+    h = cfg.n_heads
+    ks = jax.random.split(key, 8)
+    s = d**-0.5
+    shd = hd**-0.5
+    gates = {}
+    for name, k_ in zip(("z", "i", "f", "o"), ks[2:6]):
+        gates[f"w_{name}"] = (jax.random.normal(k_, (d_in, d_in)) * d_in**-0.5).astype(jnp.float32)
+        # block-diagonal recurrent connections, one dense matrix per head
+        gates[f"r_{name}"] = (
+            jax.random.normal(jax.random.fold_in(k_, 1), (h, hd, hd)) * shd
+        ).astype(jnp.float32)
+        gates[f"b_{name}"] = jnp.zeros((d_in,), jnp.float32)
+    gates["b_f"] = jnp.full((d_in,), 3.0, jnp.float32)
+    return {
+        "w_up": (jax.random.normal(ks[0], (d, d_in)) * s).astype(jnp.float32),
+        "w_down": (jax.random.normal(ks[1], (d_in, d)) * d_in**-0.5).astype(jnp.float32),
+        "out_norm": jnp.ones((d_in,), jnp.float32),
+        **gates,
+    }
+
+
+def _slstm_cell(params: dict, x_proj: dict, state: dict, h_heads: int):
+    """One time step. ``x_proj`` holds the *pre-computed* input projections
+    ``x_t @ W_* + b_*`` (hoisted out of the time scan so they run as one big
+    MXU matmul over the whole sequence — and so dry-run cost analysis counts
+    them; only the genuinely sequential recurrent matmuls stay inside).
+    state {c,n,m,h} each (B, d_in) f32."""
+    b, d_in = x_proj["z"].shape
+    hd = d_in // h_heads
+    h_prev = state["h"].reshape(b, h_heads, hd)
+
+    def rec(name):
+        # block-diagonal recurrent contribution per head
+        return jnp.einsum("bhk,hkj->bhj", h_prev, params[f"r_{name}"]).reshape(b, d_in)
+
+    z = jnp.tanh(x_proj["z"] + rec("z"))
+    i_pre = x_proj["i"] + rec("i")
+    f_pre = x_proj["f"] + rec("f")
+    o = jax.nn.sigmoid(x_proj["o"] + rec("o"))
+    log_f = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(log_f + state["m"], i_pre)
+    i_sc = jnp.exp(i_pre - m_new)
+    f_sc = jnp.exp(log_f + state["m"] - m_new)
+    c = f_sc * state["c"] + i_sc * z
+    n = f_sc * state["n"] + i_sc
+    h_new = o * c / jnp.maximum(n, 1e-6)
+    return {"c": c, "n": n, "m": m_new, "h": h_new}
+
+
+def slstm_block(cfg: ModelConfig, params: dict, x: jnp.ndarray, state: dict | None):
+    """x (B,S,D). Training: scan over time. Decode: single step with state."""
+    dt = x.dtype
+    b, s, _ = x.shape
+    d_in, _ = _slstm_dims(cfg)
+    h = cfg.n_heads
+    z_in = (x @ params["w_up"].astype(dt)).astype(jnp.float32)
+    # input projections for all timesteps at once (hoisted out of the scan)
+    proj = {g: z_in @ params[f"w_{g}"] + params[f"b_{g}"] for g in ("z", "i", "f", "o")}
+
+    if state is None:
+        st = init_slstm_state(cfg, b)
+
+        def step(carry, p_t):
+            new = _slstm_cell(params, p_t, carry, h)
+            return new, new["h"]
+
+        proj_t = jax.tree_util.tree_map(lambda a: jnp.moveaxis(a, 1, 0), proj)
+        new_state, hs = jax.lax.scan(step, st, proj_t)
+        out = jnp.moveaxis(hs, 0, 1)  # (B, S, d_in)
+    else:
+        new_state = _slstm_cell(
+            params, jax.tree_util.tree_map(lambda a: a[:, 0], proj), state, h
+        )
+        out = new_state["h"][:, None, :]
+
+    out = _head_rmsnorm_flat(params["out_norm"], out, d_in // h, cfg.norm_eps)
+    y = out.astype(dt) @ params["w_down"].astype(dt)
+    return y, new_state
+
+
+def _head_rmsnorm_flat(scale: jnp.ndarray, x: jnp.ndarray, hd: int, eps: float):
+    """Group-norm over heads for flat (..., d_in) activations."""
+    shape = x.shape
+    xh = x.reshape(*shape[:-1], shape[-1] // hd, hd).astype(jnp.float32)
+    var = jnp.mean(jnp.square(xh), axis=-1, keepdims=True)
+    xh = xh / jnp.sqrt(var + eps)
+    return (xh.reshape(shape) * scale).astype(x.dtype)
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> dict:
+    d_in, _ = _slstm_dims(cfg)
+    return {
+        "c": jnp.zeros((batch, d_in), jnp.float32),
+        "n": jnp.zeros((batch, d_in), jnp.float32),
+        "m": jnp.full((batch, d_in), -1e30, jnp.float32),
+        "h": jnp.zeros((batch, d_in), jnp.float32),
+    }

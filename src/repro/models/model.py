@@ -1,0 +1,389 @@
+"""Decoder-LM / encoder-decoder assembly over the block zoo.
+
+Layer stacking: ``first_blocks`` and ``tail_blocks`` are plain python loops;
+the repeating ``pattern`` body is a ``lax.scan`` over parameter stacks with a
+leading ``n_repeats`` axis (keeps HLO size O(period), not O(depth) — the
+40-combination dry-run matrix depends on this). ``jax.checkpoint`` wraps the
+scan body when ``cfg.remat``.
+
+Three entry points:
+  * ``forward``     — full-sequence (train / prefill); returns hidden states,
+                      refreshed caches (when given) and the MoE aux loss.
+  * ``decode_step`` — one token against a cache pytree.
+  * ``loss_fn``     — next-token CE; ``cfg.fused_ce`` computes it in vocab
+                      chunks over the sequence without materializing the
+                      (B, S, V) logits (§Perf memory lever).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks as blk
+from repro.models.config import ModelConfig
+from repro.models.layers.norms import init_rmsnorm, rmsnorm
+from repro.models.layers.rotary import mrope_angles, rope_angles
+from repro.models.sharding_hints import constrain
+
+Params = dict[str, Any]
+Cache = dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+def init_params(cfg: ModelConfig, key) -> Params:
+    cfg.validate()
+    keys = jax.random.split(key, 8)
+    d, v = cfg.d_model, cfg.vocab_size
+    cross = cfg.encoder is not None
+    params: Params = {
+        "embed": (jax.random.normal(keys[0], (v, d)) * d**-0.5).astype(jnp.float32),
+        "final_norm": init_rmsnorm(d),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(keys[1], (d, v)) * d**-0.5).astype(jnp.float32)
+
+    params["first"] = tuple(
+        blk.init_block(cfg, kind, jax.random.fold_in(keys[2], i), cross=cross)
+        for i, kind in enumerate(cfg.first_blocks)
+    )
+    period = cfg.pattern
+
+    def init_period(k):
+        return {
+            f"pos{i}": blk.init_block(cfg, kind, jax.random.fold_in(k, i), cross=cross)
+            for i, kind in enumerate(period)
+        }
+
+    rep_keys = jax.random.split(keys[3], cfg.n_repeats)
+    params["stack"] = jax.vmap(init_period)(rep_keys)
+    params["tail"] = tuple(
+        blk.init_block(cfg, kind, jax.random.fold_in(keys[4], i), cross=cross)
+        for i, kind in enumerate(cfg.tail_blocks)
+    )
+
+    if cfg.encoder is not None:
+        enc = cfg.encoder
+
+        def init_enc_layer(k):
+            return {"pos0": blk.init_block(cfg, ("bidir", "mlp"), k)}
+
+        params["encoder"] = {
+            "stack": jax.vmap(init_enc_layer)(jax.random.split(keys[5], enc.n_layers)),
+            "final_norm": init_rmsnorm(d),
+        }
+    return params
+
+
+def param_count(params: Params) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))
+
+
+# --------------------------------------------------------------------------
+# positions
+# --------------------------------------------------------------------------
+def make_angles(cfg: ModelConfig, positions: jnp.ndarray) -> Optional[jnp.ndarray]:
+    """positions (S,) -> rope angles (S, bands) or None for rope-free archs."""
+    if cfg.encoder is not None:  # whisper: sinusoidal adds, no rotary
+        return None
+    if cfg.mla is not None:
+        hd = cfg.mla.rope_head_dim
+    else:
+        hd = cfg.resolved_head_dim
+    if not any(m in ("attn", "local", "mla") for m, _ in cfg.all_blocks):
+        return None  # pure-recurrent archs (xLSTM)
+    if cfg.mrope:
+        pos3 = jnp.stack([positions] * 3)  # text stream: t = h = w
+        return mrope_angles(pos3, hd, cfg.rope_theta, cfg.mrope_sections)
+    return rope_angles(positions, hd, cfg.rope_theta)
+
+
+def sinusoidal(positions: jnp.ndarray, d: int) -> jnp.ndarray:
+    """Whisper-style sinusoidal position encodings (computed, any length)."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / (half - 1))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# encoder (whisper)
+# --------------------------------------------------------------------------
+def encode(cfg: ModelConfig, params: Params, frames: jnp.ndarray) -> jnp.ndarray:
+    """frames: stubbed conv-frontend output (B, F, D) -> encoder states."""
+    enc = params["encoder"]
+    x = frames.astype(cfg.dtype)
+    x = x + sinusoidal(jnp.arange(x.shape[1]), cfg.d_model).astype(x.dtype)
+
+    def body(carry, layer_p):
+        h, _ = blk.block_apply(
+            cfg, ("bidir", "mlp"), layer_p["pos0"], carry, angles=None, mode="full"
+        )[:2]
+        return h, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, enc["stack"])
+    else:
+        x, _ = _unrolled_scan(body, x, enc["stack"], cfg.encoder.n_layers)
+    return rmsnorm(enc["final_norm"], x, cfg.norm_eps)
+
+
+# --------------------------------------------------------------------------
+# full-sequence forward (train / prefill)
+# --------------------------------------------------------------------------
+def forward(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jnp.ndarray,  # (B, S) int32
+    *,
+    vision_embeds: Optional[jnp.ndarray] = None,  # (B, P, D) VLM stub
+    frames: Optional[jnp.ndarray] = None,  # (B, F, D) audio stub
+    caches: Optional[Cache] = None,
+    decode_window: int = 0,
+) -> tuple[jnp.ndarray, Optional[Cache], jnp.ndarray]:
+    """Returns (hidden (B,S,D), caches', aux_loss)."""
+    b, s = tokens.shape
+    dt = jnp.dtype(cfg.dtype)
+    x = jnp.take(params["embed"].astype(dt), tokens, axis=0)
+    if vision_embeds is not None:
+        p = vision_embeds.shape[1]
+        x = jnp.concatenate([vision_embeds.astype(dt), x[:, p:]], axis=1)
+    enc_out = None
+    if cfg.encoder is not None:
+        enc_out = encode(cfg, params, frames)
+        x = x + sinusoidal(jnp.arange(s), cfg.d_model).astype(dt)
+
+    angles = make_angles(cfg, jnp.arange(s))
+    aux = jnp.zeros((), jnp.float32)
+
+    kw = dict(angles=angles, mode="full", enc_out=enc_out, decode_window=decode_window)
+
+    def residual_constraint(h):
+        if cfg.seq_parallel_residual:
+            return constrain(h, "dp", "model", None)
+        return h
+
+    x = residual_constraint(x)
+    new_first = []
+    for i, kind in enumerate(cfg.first_blocks):
+        c = caches["first"][i] if caches is not None else None
+        x, nc, a = blk.block_apply(cfg, kind, params["first"][i], x, cache=c, **kw)
+        x = residual_constraint(x)
+        new_first.append(nc)
+        aux = aux + a
+
+    period = cfg.pattern
+
+    def body(carry, xs):
+        x, aux = carry
+        layer_p = xs[0] if caches is not None else xs
+        layer_c = xs[1] if caches is not None else None
+        new_cs = {}
+        for i, kind in enumerate(period):
+            c = layer_c[f"pos{i}"] if layer_c is not None else None
+            x, nc, a = blk.block_apply(cfg, kind, layer_p[f"pos{i}"], x, cache=c, **kw)
+            x = residual_constraint(x)
+            new_cs[f"pos{i}"] = nc
+            aux = aux + a
+        return (x, aux), (new_cs if caches is not None else None)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    xs = (params["stack"], caches["stack"]) if caches is not None else params["stack"]
+    if cfg.scan_layers:
+        (x, aux), new_stack = jax.lax.scan(body, (x, aux), xs)
+    else:
+        (x, aux), new_stack = _unrolled_scan(body, (x, aux), xs, cfg.n_repeats)
+
+    new_tail = []
+    for i, kind in enumerate(cfg.tail_blocks):
+        c = caches["tail"][i] if caches is not None else None
+        x, nc, a = blk.block_apply(cfg, kind, params["tail"][i], x, cache=c, **kw)
+        new_tail.append(nc)
+        aux = aux + a
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    new_caches = None
+    if caches is not None:
+        new_caches = {
+            "first": tuple(new_first),
+            "stack": new_stack,
+            "tail": tuple(new_tail),
+            "pos": jnp.asarray(s, jnp.int32),
+        }
+    return x, new_caches, aux
+
+
+def _unrolled_scan(body, carry, xs, length: int):
+    """lax.scan semantics with a static python loop (dry-run cost accounting:
+    XLA counts while-loop bodies once, so the roofline pass unrolls)."""
+    ys = []
+    for i in range(length):
+        x_i = jax.tree_util.tree_map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        stacked = jax.tree_util.tree_map(lambda *zs: jnp.stack(zs), *ys)
+    else:
+        stacked = None
+    return carry, stacked
+
+
+def logits_from_hidden(cfg: ModelConfig, params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.astype(x.dtype)
+    if logits.ndim == 3:
+        return constrain(logits, "dp", None, "model")
+    return constrain(logits, "dp", "model")
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+def decode_step(
+    cfg: ModelConfig,
+    params: Params,
+    token: jnp.ndarray,  # (B, 1) int32
+    caches: Cache,
+    *,
+    decode_window: int = 0,
+    input_embed: Optional[jnp.ndarray] = None,  # (B, 1, D) overrides the token
+) -> tuple[jnp.ndarray, Cache]:
+    """One-token serve step. Returns (logits (B, V), caches')."""
+    dt = jnp.dtype(cfg.dtype)
+    pos = caches["pos"]
+    if input_embed is not None:
+        x = input_embed.astype(dt)
+    else:
+        x = jnp.take(params["embed"].astype(dt), token, axis=0)
+    if cfg.encoder is not None:
+        x = x + sinusoidal(pos[None], cfg.d_model).astype(dt)
+    angles = make_angles(cfg, pos[None])
+
+    kw = dict(angles=angles, mode="decode", enc_out=None, decode_window=decode_window)
+
+    new_first = []
+    for i, kind in enumerate(cfg.first_blocks):
+        x, nc, _ = blk.block_apply(cfg, kind, params["first"][i], x, cache=caches["first"][i], **kw)
+        new_first.append(nc)
+
+    period = cfg.pattern
+
+    def body(x, xs):
+        layer_p, layer_c = xs
+        new_cs = {}
+        for i, kind in enumerate(period):
+            x, nc, _ = blk.block_apply(cfg, kind, layer_p[f"pos{i}"], x, cache=layer_c[f"pos{i}"], **kw)
+            new_cs[f"pos{i}"] = nc
+        return x, new_cs
+
+    if cfg.scan_layers:
+        x, new_stack = jax.lax.scan(body, x, (params["stack"], caches["stack"]))
+    else:
+        x, new_stack = _unrolled_scan(
+            body, x, (params["stack"], caches["stack"]), cfg.n_repeats
+        )
+
+    new_tail = []
+    for i, kind in enumerate(cfg.tail_blocks):
+        x, nc, _ = blk.block_apply(cfg, kind, params["tail"][i], x, cache=caches["tail"][i], **kw)
+        new_tail.append(nc)
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = logits_from_hidden(cfg, params, x)[:, 0, :]
+    new_caches = {
+        "first": tuple(new_first),
+        "stack": new_stack,
+        "tail": tuple(new_tail),
+        "pos": pos + 1,
+    }
+    return logits, new_caches
+
+
+def init_cache(
+    cfg: ModelConfig,
+    batch: int,
+    cache_len: int,
+    dtype=None,
+    *,
+    decode_window: int = 0,
+) -> Cache:
+    """Zero decode-state pytree for every block."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    cross_len = cfg.encoder.n_frames if cfg.encoder is not None else 0
+    mk = lambda kind: blk.init_block_cache(
+        cfg, kind, batch, cache_len, dtype, decode_window=decode_window, cross_len=cross_len
+    )
+    period = cfg.pattern
+
+    def stack_caches(_):
+        return {f"pos{i}": mk(kind) for i, kind in enumerate(period)}
+
+    stacked = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (cfg.n_repeats,) + x.shape),
+        stack_caches(None),
+    )
+    return {
+        "first": tuple(mk(k) for k in cfg.first_blocks),
+        "stack": stacked,
+        "tail": tuple(mk(k) for k in cfg.tail_blocks),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+# --------------------------------------------------------------------------
+# losses
+# --------------------------------------------------------------------------
+def loss_fn(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jnp.ndarray,
+    targets: jnp.ndarray,
+    *,
+    vision_embeds=None,
+    frames=None,
+    aux_weight: float = 0.01,
+) -> tuple[jnp.ndarray, dict]:
+    hidden, _, aux = forward(
+        cfg, params, tokens, vision_embeds=vision_embeds, frames=frames
+    )
+    if cfg.fused_ce:
+        ce = _chunked_ce(cfg, params, hidden, targets)
+    else:
+        logits = logits_from_hidden(cfg, params, hidden).astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ce = -jnp.take_along_axis(logp, targets[..., None].astype(jnp.int32), axis=-1).mean()
+    total = ce + aux_weight * aux
+    return total, {"ce": ce, "aux": aux}
+
+
+def _chunked_ce(cfg: ModelConfig, params: Params, hidden: jnp.ndarray, targets) -> jnp.ndarray:
+    """CE over sequence chunks — never materializes (B, S, V) at once.
+
+    Static python loop (not lax.map) so the dry-run's cost analysis counts
+    every chunk; chunk logits are rematerialized in the backward pass.
+    """
+    b, s, d = hidden.shape
+    n_chunks = max(1, min(16, s // 512)) if s >= 512 else 1
+    while s % n_chunks:
+        n_chunks -= 1
+    cs = s // n_chunks
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+
+    @jax.checkpoint
+    def one(h, t):
+        logits = (h @ head.astype(h.dtype)).astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.take_along_axis(logp, t[..., None].astype(jnp.int32), axis=-1).sum()
+
+    tot = jnp.zeros((), jnp.float32)
+    for i in range(n_chunks):
+        h = jax.lax.dynamic_slice_in_dim(hidden, i * cs, cs, axis=1)
+        t = jax.lax.dynamic_slice_in_dim(targets, i * cs, cs, axis=1)
+        tot = tot + one(h, t)
+    return tot / (b * s)

@@ -1,0 +1,59 @@
+"""Small classifiers for the paper-faithful FL experiments.
+
+The paper uses a 1-hidden-layer (50 units) fully connected net on MNIST and
+the FedAvg CNN on CIFAR10. Both are expressed here as functional
+(init, apply) pairs over plain dicts so the FL loop stays model-agnostic.
+The "CNN" is an MLP with two hidden layers when features are flat synthetic
+vectors (see data.synthetic rationale).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_mlp(dims: tuple[int, ...], seed: int = 0) -> dict:
+    """dims = (in, hidden..., out); He-initialized dense stack."""
+    params = {}
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(dims) - 1)
+    for i, (d_in, d_out) in enumerate(zip(dims[:-1], dims[1:])):
+        params[f"w{i}"] = jax.random.normal(keys[i], (d_in, d_out)) * jnp.sqrt(2.0 / d_in)
+        params[f"b{i}"] = jnp.zeros((d_out,))
+    return params
+
+
+def apply_mlp(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    n_layers = len(params) // 2
+    h = x
+    for i in range(n_layers):
+        h = h @ params[f"w{i}"] + params[f"b{i}"]
+        if i < n_layers - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+
+
+def classification_loss(params: dict, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    return softmax_xent(apply_mlp(params, x), y)
+
+
+def accuracy(params: dict, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    return (apply_mlp(params, x).argmax(-1) == y).mean()
+
+
+def fedprox_loss(
+    params: dict, x: jnp.ndarray, y: jnp.ndarray, global_params: dict, mu: float
+) -> jnp.ndarray:
+    """Local loss + (mu/2)||θ - θ_global||² (Appendix D.5, Li et al. 2018)."""
+    base = classification_loss(params, x, y)
+    prox = sum(
+        jnp.sum(jnp.square(p - g))
+        for p, g in zip(
+            jax.tree_util.tree_leaves(params), jax.tree_util.tree_leaves(global_params)
+        )
+    )
+    return base + 0.5 * mu * prox

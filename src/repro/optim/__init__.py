@@ -1,0 +1,18 @@
+from repro.optim.base import Optimizer, OptState, apply_updates
+from repro.optim.sgd import sgd
+from repro.optim.adamw import adamw
+from repro.optim.schedule import constant, cosine_decay, linear_warmup_cosine
+from repro.optim.clip import clip_by_global_norm, global_norm
+
+__all__ = [
+    "Optimizer",
+    "OptState",
+    "apply_updates",
+    "sgd",
+    "adamw",
+    "constant",
+    "cosine_decay",
+    "linear_warmup_cosine",
+    "clip_by_global_norm",
+    "global_norm",
+]

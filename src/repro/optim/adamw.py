@@ -1,0 +1,55 @@
+"""AdamW for the production LM trainer.
+
+Moments are stored in fp32 regardless of param dtype; with FSDP-sharded
+params the moment trees inherit the same sharding (ZeRO-style) for free.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer, as_schedule
+
+
+def adamw(
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    lr_fn = as_schedule(lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, dtype=jnp.float32)
+        return {
+            "mu": jax.tree_util.tree_map(zeros, params),
+            "nu": jax.tree_util.tree_map(zeros, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, step):
+        del step
+        count = state["count"] + 1
+        f32 = lambda g: g.astype(jnp.float32)
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * f32(g), state["mu"], grads
+        )
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(f32(g)), state["nu"], grads
+        )
+        c = count.astype(jnp.float32)
+        mu_hat_scale = 1.0 / (1 - b1**c)
+        nu_hat_scale = 1.0 / (1 - b2**c)
+        eta = lr_fn(count)
+
+        def upd(m, v, p):
+            step_ = m * mu_hat_scale / (jnp.sqrt(v * nu_hat_scale) + eps)
+            if weight_decay:
+                step_ = step_ + weight_decay * p.astype(jnp.float32)
+            return (-eta * step_).astype(p.dtype)
+
+        updates = jax.tree_util.tree_map(upd, mu, nu, params)
+        return updates, {"mu": mu, "nu": nu, "count": count}
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,35 @@
+"""Minimal optax-style optimizer core (no optax offline).
+
+An :class:`Optimizer` is an ``(init, update)`` pair over pytrees:
+  state = opt.init(params)
+  updates, state = opt.update(grads, state, params, step)
+  params = apply_updates(params, updates)
+
+Kept deliberately optax-shaped so the FL client loop, the LM trainer and the
+dry-run all share one interface.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+
+OptState = Any
+Schedule = Callable[[Any], Any]  # step -> lr (jnp scalar ok)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], OptState]
+    update: Callable[[Any, OptState, Any, Any], tuple[Any, OptState]]
+
+
+def apply_updates(params: Any, updates: Any) -> Any:
+    return jax.tree_util.tree_map(lambda p, u: p + u.astype(p.dtype), params, updates)
+
+
+def as_schedule(lr) -> Schedule:
+    if callable(lr):
+        return lr
+    return lambda step: lr

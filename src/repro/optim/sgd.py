@@ -1,0 +1,34 @@
+"""SGD with optional momentum — the paper's client-side optimizer."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer, as_schedule
+
+
+def sgd(lr, momentum: float = 0.0) -> Optimizer:
+    lr_fn = as_schedule(lr)
+
+    if momentum == 0.0:
+
+        def init(params):
+            return ()
+
+        def update(grads, state, params, step):
+            del params
+            eta = lr_fn(step)
+            return jax.tree_util.tree_map(lambda g: -eta * g, grads), state
+
+    else:
+
+        def init(params):
+            return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+        def update(grads, state, params, step):
+            del params
+            eta = lr_fn(step)
+            new_v = jax.tree_util.tree_map(lambda v, g: momentum * v + g, state, grads)
+            return jax.tree_util.tree_map(lambda v: -eta * v, new_v), new_v
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,70 @@
+"""Ward clustering + tree cut + similarity measures."""
+import numpy as np
+import pytest
+import scipy.cluster.hierarchy as sch
+import scipy.spatial.distance as ssd
+
+from repro.core.clustering import cut_tree, pairwise_distances, ward_linkage
+from repro.core.clustering.ward import leaves_of, linkage_children
+
+
+@pytest.mark.parametrize("n,d,seed", [(10, 4, 0), (25, 8, 1), (40, 3, 2)])
+def test_ward_matches_scipy(n, d, seed):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, d))
+    dist = pairwise_distances(X, "l2")
+    ours = ward_linkage(dist)
+    ref = sch.linkage(ssd.squareform(dist, checks=False), method="ward")
+    # merge heights must match (merge order can differ on exact ties)
+    np.testing.assert_allclose(np.sort(ours[:, 2]), np.sort(ref[:, 2]), rtol=1e-8)
+    np.testing.assert_allclose(ours[:, 3], ref[:, 3])
+
+
+@pytest.mark.parametrize("measure", ["arccos", "l2", "l1"])
+def test_similarity_measures_scipy(measure):
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(15, 6))
+    ours = pairwise_distances(X, measure)
+    metric = {"arccos": "cosine", "l2": "euclidean", "l1": "cityblock"}[measure]
+    ref = ssd.squareform(ssd.pdist(X, metric=metric))
+    if measure == "arccos":
+        ref = np.arccos(np.clip(1 - ref, -1, 1))
+    np.testing.assert_allclose(ours, ref, atol=1e-8)
+    assert (np.diag(ours) == 0).all()
+    np.testing.assert_allclose(ours, ours.T)
+
+
+def test_arccos_zero_vector_convention():
+    """Zero representative gradients (never-sampled clients) cluster together."""
+    X = np.array([[0.0, 0.0], [0.0, 0.0], [1.0, 0.0]])
+    d = pairwise_distances(X, "arccos")
+    assert d[0, 1] == 0.0
+    np.testing.assert_allclose(d[0, 2], np.pi / 2)
+
+
+def test_cut_tree_respects_capacity_and_count():
+    rng = np.random.default_rng(0)
+    n, m = 30, 6
+    X = rng.normal(size=(n, 4))
+    mass = np.full(n, 10) * m
+    capacity = int(10 * n)  # M = sum n_i
+    link = ward_linkage(pairwise_distances(X, "l2"))
+    groups = cut_tree(link, n, m, mass, capacity)
+    assert len(groups) >= m
+    covered = np.sort(np.concatenate(groups))
+    np.testing.assert_array_equal(covered, np.arange(n))
+    for g in groups:
+        assert mass[g].sum() <= capacity
+
+
+def test_cut_tree_rejects_oversize_client():
+    link = ward_linkage(np.ones((4, 4)) - np.eye(4))
+    with pytest.raises(ValueError):
+        cut_tree(link, 4, 2, np.array([100, 1, 1, 1]), 50)
+
+
+def test_leaves_of_partition():
+    link = ward_linkage(np.random.default_rng(0).normal(size=(8, 8)) ** 2)
+    children = linkage_children(link, 8)
+    root = 8 + link.shape[0] - 1
+    assert sorted(leaves_of(root, children)) == list(range(8))

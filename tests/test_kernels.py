@@ -1,0 +1,116 @@
+"""Per-kernel shape/dtype sweeps against pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.aggregate.kernel import aggregate_kernel
+from repro.kernels.aggregate.ops import aggregate_trees
+from repro.kernels.aggregate.ref import aggregate_ref
+from repro.kernels.flash_attention.ops import flash_attention_padded
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.similarity.kernel import pairwise_kernel
+from repro.kernels.similarity.ops import pairwise_distances_device
+from repro.kernels.similarity.ref import gram_ref, l1_ref
+from repro.core.clustering.similarity import pairwise_distances as np_pairwise
+
+RNG = np.random.default_rng(0)
+
+
+# --------------------------------------------------------------------------
+# similarity
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("n,d", [(8, 16), (33, 70), (64, 128), (100, 257)])
+@pytest.mark.parametrize("op", ["gram", "l1"])
+def test_pairwise_kernel_shapes(n, d, op):
+    G = jnp.asarray(RNG.normal(size=(n, d)), jnp.float32)
+    got = pairwise_kernel(G, op=op, block_n=16, block_d=32, interpret=True)
+    ref = gram_ref(G) if op == "gram" else l1_ref(G)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-3)
+
+
+@pytest.mark.parametrize("measure", ["arccos", "l2", "l1"])
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_pairwise_distances_vs_numpy_reference(measure, dtype):
+    G = RNG.normal(size=(21, 45)).astype(dtype)
+    dev = np.asarray(
+        pairwise_distances_device(G, measure, block_n=8, block_d=16, interpret=True)
+    )
+    ref = np_pairwise(G, measure)
+    np.testing.assert_allclose(dev, ref, atol=1e-4)
+
+
+def test_pairwise_distance_zero_rows():
+    G = np.zeros((5, 12), np.float32)
+    G[2] = RNG.normal(size=12)
+    dev = np.asarray(pairwise_distances_device(G, "arccos", interpret=True, block_n=8))
+    assert dev[0, 1] == 0.0
+    np.testing.assert_allclose(dev[0, 2], np.pi / 2, atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# aggregate
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("k,p", [(1, 64), (7, 1000), (32, 4096), (11, 12345)])
+def test_aggregate_kernel_sweep(k, p):
+    U = jnp.asarray(RNG.normal(size=(k, p)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(k,)), jnp.float32)
+    got = aggregate_kernel(U, w, block_p=512, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(aggregate_ref(U, w)), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_aggregate_trees_matches_tree_arithmetic():
+    trees = [
+        {"a": jnp.asarray(RNG.normal(size=(4, 5)), jnp.float32), "b": jnp.asarray(RNG.normal(size=(7,)), jnp.float32)}
+        for _ in range(3)
+    ]
+    w = np.array([0.2, 0.3, 0.5])
+    got = aggregate_trees(trees, w, interpret=True)
+    from repro.fl.aggregation import weighted_tree_sum
+
+    ref = weighted_tree_sum(trees, w)
+    for kk in ("a", "b"):
+        np.testing.assert_allclose(np.asarray(got[kk]), np.asarray(ref[kk]), atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# flash attention
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "b,s,h,kv,hd", [(1, 32, 4, 4, 16), (2, 64, 8, 2, 32), (1, 48, 6, 1, 64), (2, 40, 4, 2, 8)]
+)
+def test_flash_attention_gqa_sweep(b, s, h, kv, hd):
+    q = jnp.asarray(RNG.normal(size=(b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, s, kv, hd)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, s, kv, hd)), jnp.float32)
+    got = flash_attention_padded(q, k, v, block_q=16, block_k=16, interpret=True)
+    ref = attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    q = jnp.asarray(RNG.normal(size=(1, 32, 4, 16)), jnp.bfloat16)
+    k = jnp.asarray(RNG.normal(size=(1, 32, 2, 16)), jnp.bfloat16)
+    v = jnp.asarray(RNG.normal(size=(1, 32, 2, 16)), jnp.bfloat16)
+    got = flash_attention_padded(q, k, v, block_q=16, block_k=16, interpret=True)
+    ref = attention_ref(q, k, v)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(ref, np.float32), atol=3e-2
+    )
+
+
+def test_flash_attention_matches_model_layer():
+    """Kernel output == the model's attend() (same masking semantics)."""
+    from repro.configs import get_config
+    from repro.models.layers.attention import attend, causal_mask
+
+    cfg = get_config("qwen2-1.5b", reduced=True)
+    b, s, h, kv, hd = 2, 32, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = jnp.asarray(RNG.normal(size=(b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, s, kv, hd)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, s, kv, hd)), jnp.float32)
+    model_out = attend(cfg, q, k, v, causal_mask(s, s, 0)).reshape(b, s, h, hd)
+    kern_out = flash_attention_padded(q, k, v, block_q=16, block_k=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(kern_out), np.asarray(model_out), atol=2e-5)

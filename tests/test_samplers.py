@@ -1,0 +1,139 @@
+"""Sampler behaviour: Proposition 1, unbiasedness, draw semantics."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    Algorithm1Sampler,
+    Algorithm2Sampler,
+    ClientPopulation,
+    MDSampler,
+    TargetSampler,
+    UniformSampler,
+    build_plan_algorithm1,
+    max_draws_bound,
+    validate_plan,
+)
+
+BALANCED = ClientPopulation(np.full(100, 500))
+UNBALANCED = ClientPopulation(
+    np.concatenate(
+        [np.full(10, 100), np.full(30, 250), np.full(30, 500), np.full(20, 750), np.full(10, 1000)]
+    )
+)  # the paper's CIFAR profile
+
+
+@pytest.mark.parametrize("pop", [BALANCED, UNBALANCED], ids=["balanced", "unbalanced"])
+@pytest.mark.parametrize("m", [5, 10, 20])
+def test_md_plan_satisfies_proposition1(pop, m):
+    validate_plan(MDSampler(pop, m).plan, pop)
+
+
+@pytest.mark.parametrize("pop", [BALANCED, UNBALANCED], ids=["balanced", "unbalanced"])
+@pytest.mark.parametrize("m", [5, 10, 20])
+def test_algorithm1_plan_satisfies_proposition1(pop, m):
+    validate_plan(Algorithm1Sampler(pop, m).plan, pop)
+
+
+@pytest.mark.parametrize("m", [5, 10])
+def test_algorithm2_plan_satisfies_proposition1(m):
+    s = Algorithm2Sampler(UNBALANCED, m, update_dim=16, seed=0)
+    validate_plan(s.plan, UNBALANCED)
+    # after observing updates it re-clusters and must stay valid
+    rng = np.random.default_rng(0)
+    ids = np.arange(0, 40)
+    s.observe_updates(ids, rng.normal(size=(len(ids), 16)))
+    validate_plan(s.plan, UNBALANCED)
+
+
+def test_algorithm1_max_draws_bound():
+    """Section 4: client i appears in at most floor(m p_i) + 2 distributions."""
+    for pop in (BALANCED, UNBALANCED):
+        m = 10
+        plan = build_plan_algorithm1(pop, m)
+        bound = np.floor(m * pop.importances) + 2
+        assert (max_draws_bound(plan) <= bound).all()
+
+
+def test_algorithm1_balanced_divisor_is_partition():
+    """n=100 balanced, m=10 divides n -> every client in exactly one urn."""
+    plan = build_plan_algorithm1(BALANCED, 10)
+    assert (max_draws_bound(plan) == 1).all()
+    # each urn holds exactly 10 clients at probability 1/10 each
+    assert ((plan.r > 0).sum(axis=1) == 10).all()
+
+
+def test_sampling_weights_sum_to_one():
+    for sampler in (
+        MDSampler(BALANCED, 10),
+        Algorithm1Sampler(BALANCED, 10),
+        Algorithm2Sampler(BALANCED, 10, update_dim=4),
+    ):
+        res = sampler.sample(0)
+        assert res.clients.shape == (10,)
+        np.testing.assert_allclose(res.agg_weights.sum(), 1.0)
+        assert res.stale_weight == 0.0
+
+
+def test_uniform_sampler_is_biased_with_stale_mass():
+    s = UniformSampler(UNBALANCED, 10)
+    res = s.sample(0)
+    assert len(res.clients) == 10
+    assert res.stale_weight > 0  # eq. (3): non-sampled mass stays on θ^t
+    np.testing.assert_allclose(res.agg_weights.sum() + res.stale_weight, 1.0)
+
+
+def test_empirical_unbiasedness():
+    """E[ω_i] = p_i (eq. 12) for the unbiased schemes."""
+    m, T = 10, 4000
+    for cls in (MDSampler, Algorithm1Sampler):
+        s = cls(UNBALANCED, m, seed=3)
+        ws = np.stack([s.sample(t).agg_weights for t in range(T)])
+        np.testing.assert_allclose(
+            ws.mean(axis=0), UNBALANCED.importances, atol=4 * np.sqrt(0.25 / m / T) + 2e-3
+        )
+
+
+def test_target_sampler_controlled_setting():
+    """Oracle grouping: one client per class-cluster every round."""
+    groups = [np.arange(i * 10, (i + 1) * 10) for i in range(10)]
+    s = TargetSampler(BALANCED, 10, groups, seed=0)
+    validate_plan(s.plan, BALANCED)
+    for t in range(20):
+        res = s.sample(t)
+        # exactly one client from each oracle group
+        got = sorted(c // 10 for c in res.clients)
+        assert got == list(range(10))
+
+
+def test_algorithm2_cold_start_zero_gradients():
+    """Clients never sampled share a 0 representative gradient and cluster
+    together (Section 5) — the plan must still be valid."""
+    s = Algorithm2Sampler(UNBALANCED, 10, update_dim=8, seed=1)
+    validate_plan(s.plan, UNBALANCED)
+    res = s.sample(0)
+    assert len(res.unique_clients) >= 1
+
+
+def test_algorithm2_separates_known_clusters():
+    """With clearly clustered updates, same-cluster clients land in the same
+    distribution (mirrors Fig. 1's 'converges to target')."""
+    pop = ClientPopulation(np.full(20, 100))
+    s = Algorithm2Sampler(pop, 4, update_dim=8, seed=0)
+    rng = np.random.default_rng(0)
+    centers = rng.normal(size=(4, 8)) * 10
+    G = np.repeat(centers, 5, axis=0) + 0.01 * rng.normal(size=(20, 8))
+    s.observe_updates(np.arange(20), G)
+    validate_plan(s.plan, pop)
+    cl = s.plan.cluster_of
+    for g in range(4):
+        members = cl[g * 5 : (g + 1) * 5]
+        assert len(np.unique(members)) <= 2  # Ward K>=m cut may split one
+
+
+def test_large_client_dedicated_distributions():
+    """Section 5 final remark: p_i >= 1/m -> floor(m p_i) probability-1 urns."""
+    pop = ClientPopulation(np.array([600, 100, 100, 100, 100]))  # p_0 = 0.6
+    m = 5  # m p_0 = 3
+    s = Algorithm2Sampler(pop, m, update_dim=4, seed=0)
+    validate_plan(s.plan, pop)
+    assert (s.plan.r[:, 0] == 1.0).sum() == 3

@@ -1,0 +1,97 @@
+"""Property-based tests (hypothesis) of the paper's statistical theorems.
+
+For ANY population and ANY Proposition-1-satisfying plan produced by
+Algorithm 1/2:
+  * eq. (17): Var_C[ω_i] <= Var_MD[ω_i]  for every client,
+  * eq. (23): P_C(i ∈ S) >= P_MD(i ∈ S)  for every client,
+  * both with equality iff every W_k equals W_0.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    ClientPopulation,
+    build_plan_algorithm1,
+    build_plan_algorithm2,
+    validate_plan,
+)
+from repro.core.statistics import (
+    clustered_inclusion_probability,
+    clustered_weight_variance,
+    md_inclusion_probability,
+    md_weight_variance,
+    variance_reduction,
+)
+
+populations = st.lists(st.integers(min_value=1, max_value=2000), min_size=6, max_size=60)
+ms = st.integers(min_value=2, max_value=12)
+
+
+@given(populations, ms)
+@settings(max_examples=40, deadline=None)
+def test_algorithm1_variance_and_inclusion_theorems(ns, m):
+    pop = ClientPopulation(np.array(ns))
+    plan = build_plan_algorithm1(pop, m)
+    validate_plan(plan, pop)
+    p = pop.importances
+
+    v_md = md_weight_variance(p, m)
+    v_c = clustered_weight_variance(plan)
+    assert (v_c <= v_md + 1e-12).all(), "eq.(17) violated"
+    assert (variance_reduction(plan, pop) >= -1e-12).all()
+
+    q_md = md_inclusion_probability(p, m)
+    q_c = clustered_inclusion_probability(plan)
+    assert (q_c >= q_md - 1e-12).all(), "eq.(23) violated"
+
+
+@given(populations, ms, st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=25, deadline=None)
+def test_algorithm2_theorems_random_gradients(ns, m, seed):
+    pop = ClientPopulation(np.array(ns))
+    rng = np.random.default_rng(seed)
+    G = rng.normal(size=(pop.n_clients, 6))
+    plan = build_plan_algorithm2(pop, m, G)
+    validate_plan(plan, pop)
+
+    p = pop.importances
+    assert (clustered_weight_variance(plan) <= md_weight_variance(p, m) + 1e-12).all()
+    assert (
+        clustered_inclusion_probability(plan) >= md_inclusion_probability(p, m) - 1e-12
+    ).all()
+
+
+@given(populations, ms)
+@settings(max_examples=25, deadline=None)
+def test_equality_iff_md(ns, m):
+    """MD sampling (r_k = p ∀k) achieves exact equality in both bounds."""
+    pop = ClientPopulation(np.array(ns))
+    from repro.core.types import SamplingPlan
+
+    plan = SamplingPlan(r=np.tile(pop.importances, (m, 1)))
+    p = pop.importances
+    np.testing.assert_allclose(clustered_weight_variance(plan), md_weight_variance(p, m))
+    np.testing.assert_allclose(
+        clustered_inclusion_probability(plan), md_inclusion_probability(p, m)
+    )
+
+
+def test_closed_form_variance_matches_monte_carlo():
+    """eq. (16) against realized sampling for Algorithm 1."""
+    from repro.core import Algorithm1Sampler
+
+    pop = ClientPopulation(np.array([100, 250, 500, 750, 1000] * 4))
+    m, T = 6, 6000
+    s = Algorithm1Sampler(pop, m, seed=0)
+    ws = np.stack([s.sample(t).agg_weights for t in range(T)])
+    theory = clustered_weight_variance(s.plan)
+    mc = ws.var(axis=0)
+    np.testing.assert_allclose(mc, theory, atol=5e-4)
+
+
+def test_distinct_clients_probability_paper_number():
+    """Section 6: with n=100 uniform, m=10, P(10 distinct) ≈ 63% for MD."""
+    from repro.core.statistics import md_prob_all_distinct
+
+    p = md_prob_all_distinct(np.full(100, 0.01), 10)
+    assert abs(p - 0.6282) < 1e-3
