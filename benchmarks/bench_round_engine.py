@@ -1,0 +1,87 @@
+"""Round-throughput: batched on-device engine vs the compat per-client loop.
+
+The looped path pays m jitted dispatches + m host-side parameter flattens
+per round; the batched engine runs the whole round (local training,
+aggregation, representative gradients) as ONE jitted step over a padded
+client axis, with the dataset resident on device. The gap widens with m —
+the acceptance target is >= 3x at m = 40 on CPU.
+
+Usage (module form — `benchmarks` is a package):
+  PYTHONPATH=src python -m benchmarks.bench_round_engine [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import MDSampler
+from repro.fl import FLConfig, FederatedServer
+from repro.models.simple import init_mlp
+from repro.optim import sgd
+
+
+def _dataset(n_clients: int, dim: int, per_client: int):
+    from repro.data.federated import ClientData, FederatedDataset
+
+    rng = np.random.default_rng(0)
+    clients = []
+    for c in range(n_clients):
+        x = rng.normal(size=(per_client, dim)).astype(np.float32)
+        y = rng.integers(0, 10, size=per_client)
+        clients.append(
+            ClientData(x_train=x, y_train=y, x_test=x[:8], y_test=y[:8])
+        )
+    return FederatedDataset(clients)
+
+
+def _rounds_per_sec(dataset, m: int, engine: str, *, rounds: int, dim: int) -> float:
+    params = init_mlp((dim, 32, 10), seed=1)
+    cfg = FLConfig(
+        n_rounds=rounds, n_local_steps=10, batch_size=32,
+        seed=0, eval_every=10**9, engine=engine,
+    )
+    srv = FederatedServer(
+        dataset, MDSampler(dataset.population, m, seed=0), params, sgd(0.05), cfg
+    )
+    srv.run_round(0)  # warm-up: compile
+    t0 = time.perf_counter()
+    for t in range(1, rounds + 1):
+        srv.run_round(t)
+    return rounds / (time.perf_counter() - t0)
+
+
+def main(argv: "list[str] | None" = None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="tiny sizes for CI")
+    # programmatic callers (benchmarks.run) pass no argv and get defaults;
+    # parse_args(None) would read the harness's own sys.argv and SystemExit
+    args = ap.parse_args([] if argv is None else argv)
+
+    dim = 16
+    ms = (5,) if args.smoke else (5, 10, 40)
+    rounds = 3 if args.smoke else 12
+    dataset = _dataset(n_clients=80, dim=dim, per_client=100)
+
+    for m in ms:
+        rps = {
+            engine: _rounds_per_sec(dataset, m, engine, rounds=rounds, dim=dim)
+            for engine in ("compat", "batched")
+        }
+        speedup = rps["batched"] / rps["compat"]
+        emit(
+            f"round_engine/m={m}/compat", 1e6 / rps["compat"], "us per round"
+        )
+        emit(
+            f"round_engine/m={m}/batched",
+            1e6 / rps["batched"],
+            f"us per round; speedup={speedup:.2f}x",
+        )
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(sys.argv[1:])

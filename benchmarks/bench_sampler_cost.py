@@ -1,6 +1,12 @@
 """Algorithm cost scaling (Theorems 3 & 4): Algorithm 1 is O(n log n);
-Algorithm 2 is O(n^2 d + X) dominated by the similarity matrix."""
+Algorithm 2 is O(n^2 d + X) dominated by the similarity matrix.
+
+``--smoke`` runs one tiny size per algorithm — used by the tier-1 script to
+catch import/collection regressions in the benchmark tree cheaply.
+"""
 from __future__ import annotations
+
+import argparse
 
 import numpy as np
 
@@ -8,13 +14,21 @@ from benchmarks.common import emit, timed
 from repro.core import ClientPopulation, build_plan_algorithm1, build_plan_algorithm2
 
 
-def main() -> None:
+def main(argv: "list[str] | None" = None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="tiny sizes for CI")
+    # programmatic callers (benchmarks.run) pass no argv and get defaults;
+    # parse_args(None) would read the harness's own sys.argv and SystemExit
+    args = ap.parse_args([] if argv is None else argv)
+
     rng = np.random.default_rng(0)
-    for n in (50, 100, 200, 400):
+    a1_sizes = (50,) if args.smoke else (50, 100, 200, 400)
+    a2_sizes = (50,) if args.smoke else (50, 100, 200)
+    for n in a1_sizes:
         pop = ClientPopulation(rng.integers(50, 1000, size=n))
         us, _ = timed(lambda: build_plan_algorithm1(pop, 10), repeats=5)
         emit(f"sampler_cost/algorithm1/n={n}", us, "theory=O(n log n)")
-    for n in (50, 100, 200):
+    for n in a2_sizes:
         pop = ClientPopulation(rng.integers(50, 1000, size=n))
         G = rng.normal(size=(n, 256))
         us, _ = timed(lambda: build_plan_algorithm2(pop, 10, G), repeats=2)
@@ -22,4 +36,6 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+
+    main(sys.argv[1:])

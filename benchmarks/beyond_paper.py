@@ -51,7 +51,7 @@ def main() -> None:
 
     rng = np.random.default_rng(0)
     G = rng.normal(size=(pop.n_clients, d))
-    host = Algorithm2Sampler(pop, 10, update_dim=d, seed=0)
+    host = Algorithm2Sampler(pop, 10, update_dim=d, seed=0, distance_fn="numpy")
     dev = Algorithm2Sampler(pop, 10, update_dim=d, seed=0, distance_fn=make_distance_fn(interpret=True))
     ids = np.arange(pop.n_clients)
     host.observe_updates(ids, G)

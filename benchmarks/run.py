@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   bench_sampler_cost   — Theorems 3/4 complexity scaling
   bench_kernels        — Pallas kernel paths + oracles
   bench_fl_collectives — communication accounting (paper's motivation)
+  bench_round_engine   — batched on-device round engine vs compat loop
 """
 from __future__ import annotations
 
@@ -20,6 +21,7 @@ from benchmarks import (
     bench_dryrun_roofline,
     bench_fl_collectives,
     bench_kernels,
+    bench_round_engine,
     bench_sampler_cost,
     beyond_paper,
     fig1_controlled,
@@ -30,6 +32,7 @@ from benchmarks import (
 MODULES = [
     ("table_variance", table_variance),
     ("bench_sampler_cost", bench_sampler_cost),
+    ("bench_round_engine", bench_round_engine),
     ("bench_fl_collectives", bench_fl_collectives),
     ("bench_kernels", bench_kernels),
     ("bench_dryrun_roofline", bench_dryrun_roofline),

@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# Tier-1 verification: the full test suite + benchmark smoke runs.
+#
+# Collection errors (missing optional deps, jax API drift) take down whole
+# test modules silently under plain `pytest path` invocations — this script
+# is the one entry point CI and humans share, so such regressions fail fast.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest =="
+python -m pytest -q
+
+echo "== tier-1: benchmark smoke (import + run sanity) =="
+python -m benchmarks.bench_sampler_cost --smoke
+python -m benchmarks.bench_round_engine --smoke
+
+echo "tier-1 OK"

@@ -15,7 +15,7 @@ probability-1 distributions, their remainder mass joining the common pool
 """
 from __future__ import annotations
 
-from typing import Callable, Optional
+from typing import Callable, Optional, Union
 
 import numpy as np
 
@@ -28,6 +28,21 @@ from repro.core.types import ClientPopulation, SamplingPlan, SampleResult
 
 # pairwise-distance backend signature: (G, measure) -> (n, n) distances
 DistanceFn = Callable[[np.ndarray, str], np.ndarray]
+
+
+def _resolve_distance_fn(distance_fn: Union[DistanceFn, str, None]) -> Optional[DistanceFn]:
+    """Map the sampler's ``distance_fn`` argument to a callable.
+
+    Strings name a backend (see
+    :func:`repro.kernels.similarity.ops.resolve_distance_backend`); the
+    import is deferred so ``repro.core`` stays importable without jax.
+    ``None`` keeps the numpy host reference.
+    """
+    if distance_fn is None or callable(distance_fn):
+        return distance_fn
+    from repro.kernels.similarity.ops import resolve_distance_backend
+
+    return resolve_distance_backend(distance_fn)
 
 
 def build_plan_algorithm2(
@@ -90,21 +105,27 @@ class Algorithm2Sampler(ClusteredSampler):
         *,
         measure: str = "arccos",
         seed: int = 0,
-        distance_fn: Optional[DistanceFn] = None,
+        distance_fn: Union[DistanceFn, str, None] = "auto",
         staleness_decay: float = 1.0,
     ):
         """``staleness_decay`` < 1 is a beyond-paper extension: every round,
         stored representative gradients shrink by this factor, so clients
         that have not been sampled for many rounds drift back toward the
         zero-vector (cold-start) cluster instead of being clustered on
-        arbitrarily stale similarity. 1.0 = the paper's behaviour."""
+        arbitrarily stale similarity. 1.0 = the paper's behaviour.
+
+        ``distance_fn`` selects the O(n²d) pairwise-distance backend: a
+        backend name (``"auto"`` — the default device path: compiled Pallas
+        on TPU/GPU, interpret-mode Pallas on CPU; ``"pallas"``;
+        ``"pallas-interpret"``; ``"numpy"``), a custom callable, or ``None``
+        for the numpy host reference."""
         self.measure = measure
         self.update_dim = int(update_dim)
-        self._distance_fn = distance_fn
+        self._distance_fn = _resolve_distance_fn(distance_fn)
         self.staleness_decay = float(staleness_decay)
         self._G = np.zeros((population.n_clients, update_dim), dtype=np.float64)
         plan = build_plan_algorithm2(
-            population, m, self._G, measure=measure, distance_fn=distance_fn
+            population, m, self._G, measure=measure, distance_fn=self._distance_fn
         )
         super().__init__(population, plan, seed=seed)
 

@@ -1,7 +1,13 @@
 from repro.fl.partition import by_class_shards, dirichlet_labels, PAPER_SIZE_PROFILE
-from repro.fl.client import local_update, draw_batch_indices
-from repro.fl.aggregation import aggregate_round, weighted_tree_sum, flatten_params
-from repro.fl.server import FederatedServer, FLConfig
+from repro.fl.client import local_update, local_steps, draw_batch_indices
+from repro.fl.aggregation import (
+    aggregate_round,
+    aggregate_stacked,
+    weighted_tree_sum,
+    flatten_params,
+)
+from repro.fl.engine import BatchedRoundEngine, batched_round_step
+from repro.fl.server import EmptyRoundError, FederatedServer, FLConfig
 from repro.fl.history import History, RoundRecord
 
 __all__ = [
@@ -9,10 +15,15 @@ __all__ = [
     "dirichlet_labels",
     "PAPER_SIZE_PROFILE",
     "local_update",
+    "local_steps",
     "draw_batch_indices",
     "aggregate_round",
+    "aggregate_stacked",
     "weighted_tree_sum",
     "flatten_params",
+    "BatchedRoundEngine",
+    "batched_round_step",
+    "EmptyRoundError",
     "FederatedServer",
     "FLConfig",
     "History",

@@ -43,6 +43,27 @@ def aggregate_round(
     return new
 
 
+def aggregate_stacked(global_params, stacked_params, weights, stale_weight):
+    """Device-side eq. 3/4 over a stacked client axis (jit/vmap friendly).
+
+    ``stacked_params`` is the pytree of client models with a leading client
+    axis (leaf shape (c, …)); ``weights`` is (c,) — padded slots carry weight
+    0 and therefore contribute nothing. ``stale_weight`` adds eq. 3's mass on
+    the current global model (traced scalar, 0 for unbiased schemes).
+    The reduction runs in f32 and is cast back to each leaf's dtype.
+    """
+    w = jnp.asarray(weights, jnp.float32)
+    sw = jnp.asarray(stale_weight, jnp.float32)
+    return jax.tree_util.tree_map(
+        lambda stacked, g: (
+            jnp.einsum("c,c...->...", w, stacked.astype(jnp.float32))
+            + sw * g.astype(jnp.float32)
+        ).astype(g.dtype),
+        stacked_params,
+        global_params,
+    )
+
+
 def flatten_params(tree) -> jnp.ndarray:
     """Flatten a pytree into one vector (representative-gradient plumbing)."""
     leaves = jax.tree_util.tree_leaves(tree)

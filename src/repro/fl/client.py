@@ -1,8 +1,12 @@
 """Client-side local work: N SGD steps from the received global model.
 
-A single jitted ``lax.scan`` over pre-drawn batch indices — the same code
-path is reused by every sampled client in a round (shapes are static:
-(N, B) index matrix), so one compile covers the whole FL run.
+``local_steps`` is the un-jitted scan body shared by two callers:
+
+* ``local_update`` — the jitted single-client entry point used by the
+  ``compat`` (looped) server path; shapes are static ((N, B) index matrix),
+  so one compile covers the whole FL run.
+* ``repro.fl.engine`` — the batched round engine vmaps ``local_steps`` over
+  a stacked client axis so every sampled client's round runs in one jit.
 """
 from __future__ import annotations
 
@@ -17,8 +21,7 @@ from repro.optim.base import Optimizer, apply_updates
 LossFn = Callable[..., jnp.ndarray]  # (params, x, y, [global_params]) -> scalar
 
 
-@functools.partial(jax.jit, static_argnames=("loss_fn", "opt", "fedprox_mu"))
-def local_update(
+def local_steps(
     params,
     x: jnp.ndarray,
     y: jnp.ndarray,
@@ -45,6 +48,20 @@ def local_update(
     init = (params, opt.init(params), jnp.zeros((), jnp.int32))
     (new_params, _, _), losses = jax.lax.scan(step, init, batch_idx)
     return new_params, losses.mean()
+
+
+@functools.partial(jax.jit, static_argnames=("loss_fn", "opt", "fedprox_mu"))
+def local_update(
+    params,
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    batch_idx: jnp.ndarray,
+    loss_fn: LossFn,
+    opt: Optimizer,
+    fedprox_mu: float = 0.0,
+):
+    """Jitted single-client round (the ``compat`` reference path)."""
+    return local_steps(params, x, y, batch_idx, loss_fn, opt, fedprox_mu)
 
 
 def draw_batch_indices(rng, n_data: int, n_steps: int, batch_size: int) -> jnp.ndarray:

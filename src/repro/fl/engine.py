@@ -1,0 +1,152 @@
+"""Batched on-device FL round engine.
+
+The paper's protocol runs ``m`` sampled clients per round. The seed server
+trained them one-by-one in a Python loop — m jitted dispatches plus m
+host-side parameter copies per round, so wall-clock grows linearly in m.
+This engine runs the *whole round* as ONE jitted step:
+
+  1. every client's train set is padded to a common length and stacked once
+     into a device-resident (n, n_pad, …) block at construction time;
+  2. per round, the distinct sampled clients are gathered *on device* by
+     slot index, and all local updates run as ``vmap(local_steps)`` — the
+     same ``lax.scan`` body as the ``compat`` path, so the two paths agree
+     to fp32 tolerance (FedProx proximal term included);
+  3. the weighted aggregation (eq. 3/4 incl. ``stale_weight``) and the
+     flattened representative gradients ``θ_i^{t+1} − θ^t`` (Algorithm 2
+     line 1's input, fed to ``sampler.observe_updates``) are computed in the
+     same jitted step — nothing round-trips through the host except the
+     (m, N, B) batch-index block and the scalar losses.
+
+Shapes are static across the run: the client axis is always padded to
+``m_slots`` (zero weight ⇒ zero contribution for unused slots), so the
+engine compiles exactly once per FL run regardless of how many *distinct*
+clients each round realizes. Per-round padding waste is ``m_slots −
+n_distinct`` client-updates — small, because clustered sampling exists
+precisely to keep the draws distinct.
+
+RNG discipline matches the compat loop exactly: batch indices are drawn
+from the server's host rng per distinct client, in distinct order, and
+padded slots consume no randomness — so the same seed yields the same
+realized batches on both paths.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fl.aggregation import aggregate_stacked, flatten_params
+from repro.fl.client import LossFn, local_steps
+from repro.optim.base import Optimizer
+
+
+def staged_bytes(dataset) -> int:
+    """Device bytes the engine pins for ``dataset``: every client padded to
+    the largest client (f32 features + i32 labels)."""
+    n_pad = max(c.n_train for c in dataset.clients)
+    feat = int(np.prod(dataset.clients[0].x_train.shape[1:]))
+    return dataset.n_clients * n_pad * (feat * 4 + 4)
+
+
+@functools.partial(jax.jit, static_argnames=("loss_fn", "opt", "fedprox_mu"))
+def batched_round_step(
+    global_params,
+    x_all: jnp.ndarray,  # (n, n_pad, …) stacked client features
+    y_all: jnp.ndarray,  # (n, n_pad) stacked client labels
+    slot_ids: jnp.ndarray,  # (m_slots,) client id per slot (0 for padding)
+    batch_idx: jnp.ndarray,  # (m_slots, N, B) per-slot batch indices
+    weights: jnp.ndarray,  # (m_slots,) realized ω, 0 for padded slots
+    stale_weight: jnp.ndarray,  # scalar, eq. 3 mass on θ^t
+    *,
+    loss_fn: LossFn,
+    opt: Optimizer,
+    fedprox_mu: float = 0.0,
+):
+    """One full FL round on device.
+
+    Returns (new_global_params, (m_slots, d) flat updates, (m_slots,) mean
+    local losses). Padded slots train on client 0's data with weight 0 —
+    their outputs are discarded by the caller.
+    """
+    x = x_all[slot_ids]
+    y = y_all[slot_ids]
+
+    def one_client(xc, yc, idxc):
+        return local_steps(global_params, xc, yc, idxc, loss_fn, opt, fedprox_mu)
+
+    client_params, losses = jax.vmap(one_client)(x, y, batch_idx)
+    new_params = aggregate_stacked(global_params, client_params, weights, stale_weight)
+    flat_global = flatten_params(global_params)
+    updates = jax.vmap(lambda cp: flatten_params(cp) - flat_global)(client_params)
+    return new_params, updates, losses
+
+
+class BatchedRoundEngine:
+    """Stages a :class:`~repro.data.federated.FederatedDataset` once and runs
+    rounds through :func:`batched_round_step`.
+
+    ``m_slots`` fixes the padded client axis (normally the sampler's m).
+    """
+
+    def __init__(self, dataset, m_slots: int, n_steps: int, batch_size: int):
+        if m_slots <= 0:
+            raise ValueError("m_slots must be positive")
+        self.m_slots = int(m_slots)
+        self.n_steps = int(n_steps)
+        self.batch_size = int(batch_size)
+        self._n_train = np.array([c.n_train for c in dataset.clients])
+        n_pad = int(self._n_train.max())
+        feat = dataset.clients[0].x_train.shape[1:]
+        x_all = np.zeros((dataset.n_clients, n_pad) + feat, dtype=np.float32)
+        y_all = np.zeros((dataset.n_clients, n_pad), dtype=np.int32)
+        for i, c in enumerate(dataset.clients):
+            x_all[i, : c.n_train] = c.x_train
+            y_all[i, : c.n_train] = c.y_train
+        # device-resident for the whole run; per-round traffic is indices only
+        self._x_all = jnp.asarray(x_all)
+        self._y_all = jnp.asarray(y_all)
+
+    def run_round(
+        self,
+        params,
+        distinct: np.ndarray,
+        weights: np.ndarray,
+        stale_weight: float,
+        rng: np.random.Generator,
+        loss_fn: LossFn,
+        opt: Optimizer,
+        fedprox_mu: float = 0.0,
+    ):
+        """Returns (new_params, (c, d) flat updates, (c,) losses) for the
+        ``c = len(distinct)`` realized clients."""
+        c = len(distinct)
+        if c == 0 or c > self.m_slots:
+            raise ValueError(f"got {c} distinct clients for {self.m_slots} slots")
+        slot_ids = np.zeros(self.m_slots, dtype=np.int32)
+        slot_ids[:c] = distinct
+        idx = np.zeros((self.m_slots, self.n_steps, self.batch_size), dtype=np.int32)
+        for i, cid in enumerate(distinct):
+            # same rng stream as the compat loop's draw_batch_indices, drawn
+            # host-side (one device transfer for the whole block below)
+            idx[i] = rng.integers(
+                0, int(self._n_train[int(cid)]), size=(self.n_steps, self.batch_size)
+            )
+        w = np.zeros(self.m_slots, dtype=np.float32)
+        w[:c] = weights
+        new_params, updates, losses = batched_round_step(
+            params,
+            self._x_all,
+            self._y_all,
+            jnp.asarray(slot_ids),
+            jnp.asarray(idx),
+            jnp.asarray(w),
+            jnp.asarray(stale_weight, jnp.float32),
+            loss_fn=loss_fn,
+            opt=opt,
+            fedprox_mu=fedprox_mu,
+        )
+        # slice on the host: device slicing with the round-varying c would
+        # trigger a fresh compile per distinct-count
+        return new_params, np.asarray(updates)[:c], np.asarray(losses)[:c]

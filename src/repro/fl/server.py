@@ -8,10 +8,19 @@ Faithful to the paper's protocol:
   * similarity-based samplers get the representative gradients
     ``θ_i^{t+1} - θ^t`` of the sampled clients after the round
     (Algorithm 2 line 1's input), never raw data.
+
+Two execution engines (``FLConfig.engine``):
+  * ``"batched"`` (default) — the whole round is one jitted
+    vmap-over-clients step (:mod:`repro.fl.engine`); client data lives on
+    device for the entire run.
+  * ``"compat"`` — the original per-client Python loop, kept as the
+    numerics reference; ``tests/test_round_engine.py`` pins the two paths
+    together to fp32 tolerance.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable
 
 import jax.numpy as jnp
@@ -21,6 +30,7 @@ from repro.core.samplers.base import ClientSampler
 from repro.data.federated import FederatedDataset
 from repro.fl.aggregation import aggregate_round, flatten_params
 from repro.fl.client import draw_batch_indices, local_update
+from repro.fl.engine import BatchedRoundEngine, staged_bytes
 from repro.fl.history import History, RoundRecord
 from repro.models.simple import accuracy, classification_loss
 from repro.optim.base import Optimizer
@@ -34,6 +44,15 @@ class FLConfig:
     fedprox_mu: float = 0.0
     eval_every: int = 1
     seed: int = 0
+    engine: str = "batched"  # "batched" | "compat"
+    # The batched engine pins every client's (padded) data on device. If that
+    # exceeds this budget the server falls back to the memory-lean compat
+    # loop with a warning — both paths are numerically equivalent.
+    max_staged_bytes: int = 2 << 30
+
+
+class EmptyRoundError(ValueError):
+    """The sampler produced zero distinct clients for a round."""
 
 
 class FederatedServer:
@@ -47,6 +66,8 @@ class FederatedServer:
         loss_fn: Callable = classification_loss,
         acc_fn: Callable = accuracy,
     ):
+        if config.engine not in ("batched", "compat"):
+            raise ValueError(f"unknown engine {config.engine!r}")
         self.dataset = dataset
         self.sampler = sampler
         self.params = init_params
@@ -57,14 +78,29 @@ class FederatedServer:
         self._rng = np.random.default_rng(config.seed)
         self.history = History()
         self._x_test, self._y_test = dataset.global_test()
+        use_batched = config.engine == "batched"
+        if use_batched and staged_bytes(dataset) > config.max_staged_bytes:
+            fmt = lambda b: f"{b / 2**30:.2f} GiB" if b >= 2**30 else f"{b / 2**20:.2f} MiB"
+            warnings.warn(
+                f"batched engine would stage {fmt(staged_bytes(dataset))} of padded "
+                f"client data on device (budget {fmt(config.max_staged_bytes)}); "
+                "falling back to the compat loop — raise FLConfig.max_staged_bytes "
+                "to override",
+                stacklevel=2,
+            )
+            use_batched = False
+        self._engine = (
+            BatchedRoundEngine(
+                dataset, sampler.m, config.n_local_steps, config.batch_size
+            )
+            if use_batched
+            else None
+        )
 
     # ------------------------------------------------------------------
-    def run_round(self, t: int) -> RoundRecord:
+    def _round_compat(self, distinct: np.ndarray, weights: np.ndarray, stale_weight: float):
+        """Reference path: one jitted dispatch per distinct client."""
         cfg = self.cfg
-        result = self.sampler.sample(t)
-        distinct = result.unique_clients
-        weights = result.agg_weights[distinct]
-
         client_models, losses, updates_flat = [], [], []
         for cid in distinct:
             data = self.dataset.clients[int(cid)]
@@ -82,13 +118,42 @@ class FederatedServer:
             )
             client_models.append(new_p)
             losses.append(float(loss))
-            updates_flat.append(np.asarray(flatten_params(new_p) - flatten_params(self.params)))
+            updates_flat.append(
+                np.asarray(flatten_params(new_p) - flatten_params(self.params))
+            )
+        new_params = aggregate_round(self.params, client_models, weights, stale_weight)
+        return new_params, np.stack(updates_flat), np.asarray(losses)
 
-        self.params = aggregate_round(
-            self.params, client_models, weights, result.stale_weight
-        )
+    def run_round(self, t: int) -> RoundRecord:
+        cfg = self.cfg
+        result = self.sampler.sample(t)
+        distinct = result.unique_clients
+        if distinct.size == 0:
+            raise EmptyRoundError(
+                f"round {t}: sampler {type(self.sampler).__name__} returned zero "
+                "distinct clients — the plan has no mass anywhere; nothing to "
+                "train or aggregate"
+            )
+        weights = result.agg_weights[distinct]
+
+        if self._engine is not None:
+            self.params, updates_flat, losses = self._engine.run_round(
+                self.params,
+                distinct,
+                weights,
+                result.stale_weight,
+                self._rng,
+                self.loss_fn,
+                self.opt,
+                cfg.fedprox_mu,
+            )
+        else:
+            self.params, updates_flat, losses = self._round_compat(
+                distinct, weights, result.stale_weight
+            )
+
         # feed representative gradients back (Algorithm 2's input)
-        self.sampler.observe_updates(distinct, np.stack(updates_flat))
+        self.sampler.observe_updates(distinct, updates_flat)
 
         classes = np.unique(
             np.concatenate(

@@ -41,3 +41,32 @@ def make_distance_fn(*, interpret: bool = False):
         return np.asarray(pairwise_distances_device(G, measure, interpret=interpret))
 
     return fn
+
+
+def resolve_distance_backend(backend: str = "auto"):
+    """Pick the pairwise-distance backend for Algorithm 2's O(n²d) stage.
+
+    * ``"auto"``     — compiled Pallas kernel on TPU, interpret-mode Pallas
+      everywhere else (same code path, jax-ops execution; the kernel's
+      VMEM scratch / mosaic block specs are TPU-only).
+    * ``"pallas"``   — compiled Pallas kernel, no fallback.
+    * ``"pallas-interpret"`` — interpret-mode Pallas anywhere (tests).
+    * ``"numpy"``    — the f64 host reference
+      (:func:`repro.core.clustering.similarity.pairwise_distances`).
+    """
+    if backend == "numpy":
+        from repro.core.clustering.similarity import pairwise_distances
+
+        return pairwise_distances
+    if backend == "auto":
+        import jax
+
+        return make_distance_fn(interpret=jax.default_backend() != "tpu")
+    if backend == "pallas":
+        return make_distance_fn(interpret=False)
+    if backend == "pallas-interpret":
+        return make_distance_fn(interpret=True)
+    raise ValueError(
+        f"unknown distance backend {backend!r}; "
+        "choose from auto | pallas | pallas-interpret | numpy"
+    )

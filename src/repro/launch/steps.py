@@ -152,3 +152,53 @@ def make_step(cfg: ModelConfig, shape: InputShape, opt: Optional[Optimizer] = No
     if shape.kind == "prefill":
         return make_prefill_step(cfg, shape), "prefill"
     return make_serve_step(cfg, shape), "decode"
+
+
+# --------------------------------------------------------------------------
+# batched FL round engine (repro.fl.engine) — lowering hooks
+# --------------------------------------------------------------------------
+def fl_engine_input_specs(
+    n_clients: int,
+    m_slots: int,
+    n_pad: int,
+    feat_dim: int,
+    n_steps: int,
+    batch_size: int,
+) -> dict[str, Any]:
+    """ShapeDtypeStructs for one :func:`repro.fl.engine.batched_round_step`.
+
+    Mirrors :func:`input_specs`: zero device allocation, shardable — the
+    client axis (``m_slots``) is the natural data-parallel axis (each group
+    plays one sampled client, as in ``launch.fl_train``)."""
+    f32, i32 = jnp.float32, jnp.int32
+    return {
+        "x_all": jax.ShapeDtypeStruct((n_clients, n_pad, feat_dim), f32),
+        "y_all": jax.ShapeDtypeStruct((n_clients, n_pad), i32),
+        "slot_ids": jax.ShapeDtypeStruct((m_slots,), i32),
+        "batch_idx": jax.ShapeDtypeStruct((m_slots, n_steps, batch_size), i32),
+        "weights": jax.ShapeDtypeStruct((m_slots,), f32),
+        "stale_weight": jax.ShapeDtypeStruct((), f32),
+    }
+
+
+def make_fl_engine_step(loss_fn, opt: Optional[Optimizer] = None, *, fedprox_mu: float = 0.0):
+    """(params, batch) wrapper around the batched FL round for lowering."""
+    from repro.fl.engine import batched_round_step
+
+    o = opt or default_optimizer()
+
+    def fl_engine_step(params, batch):
+        return batched_round_step(
+            params,
+            batch["x_all"],
+            batch["y_all"],
+            batch["slot_ids"],
+            batch["batch_idx"],
+            batch["weights"],
+            batch["stale_weight"],
+            loss_fn=loss_fn,
+            opt=o,
+            fedprox_mu=fedprox_mu,
+        )
+
+    return fl_engine_step

@@ -137,3 +137,57 @@ def test_large_client_dedicated_distributions():
     s = Algorithm2Sampler(pop, m, update_dim=4, seed=0)
     validate_plan(s.plan, pop)
     assert (s.plan.r[:, 0] == 1.0).sum() == 3
+
+
+def test_large_client_remainder_joins_pool_exact_rows():
+    """Two large clients: each gets floor(m p_i) dedicated urns, the
+    remainder mass m p_i - floor(m p_i) competes in the pool, and every row
+    of r holds exactly M tokens (sums to exactly 1)."""
+    pop = ClientPopulation(np.array([500, 350, 50, 50, 50]))  # M = 1000
+    m = 4  # m p = (2.0, 1.4, 0.2, 0.2, 0.2)
+    s = Algorithm2Sampler(pop, m, update_dim=4, seed=0)
+    plan = s.plan
+    validate_plan(plan, pop)
+    # client 0: m p_0 = 2 exactly -> 2 dedicated urns, NO pool mass
+    assert (plan.r[:, 0] == 1.0).sum() == 2
+    assert plan.r_tokens[:, 0].sum() == m * 500
+    # client 1: floor(1.4) = 1 dedicated urn + 0.4 M tokens in the pool
+    assert (plan.r[:, 1] == 1.0).sum() == 1
+    pool_rows = plan.r[:, 1][(plan.r[:, 1] > 0) & (plan.r[:, 1] < 1.0)]
+    np.testing.assert_allclose(pool_rows.sum(), 0.4)
+    # token-exact eq. (7): every urn holds exactly M tokens
+    M = pop.total_samples
+    assert (plan.r_tokens.sum(axis=1) == M).all()
+    np.testing.assert_allclose(plan.r.sum(axis=1), 1.0, atol=1e-12)
+    # the realized draw semantics survive: dedicated urns always fire
+    res = s.sample(0)
+    assert (res.clients == 0).sum() >= 2
+    assert (res.clients == 1).sum() >= 1
+
+
+def test_cold_start_clients_promoted_jointly():
+    """Never-sampled clients share the constant-0 representative gradient:
+    after a partial observe, those whose joint mass fits a cluster's cap
+    (q_k <= M) must land in ONE cluster together and the rebuilt plan must
+    stay token-exact (rows sum to exactly 1)."""
+    pop = ClientPopulation(np.full(30, 100))
+    m = 5  # per-client mass m*n_i = 500, cap M = 3000 -> <= 6 clients/cluster
+    s = Algorithm2Sampler(pop, m, update_dim=8, seed=0)
+    rng = np.random.default_rng(0)
+    seen = np.arange(0, 25)
+    s.observe_updates(seen, rng.normal(size=(len(seen), 8)) * 5)
+    plan = s.plan
+    validate_plan(plan, pop)
+    never = np.arange(25, 30)  # joint mass 2500 <= M: fits one cluster
+    clusters = plan.cluster_of[never]
+    assert (clusters >= 0).all()
+    assert len(np.unique(clusters)) == 1, "cold-start clients split across clusters"
+    # no cold-start client is clustered with an already-observed client
+    assert not np.isin(plan.cluster_of[seen], clusters).any()
+    # the joint cluster is seeded into urns together: the urns carrying
+    # cold-start mass are shared across all never-sampled clients
+    urns = {frozenset(np.flatnonzero(plan.r_tokens[:, i])) for i in never}
+    assert len(urns) <= 2  # contiguity can split the group over a boundary
+    M = pop.total_samples
+    assert (plan.r_tokens.sum(axis=1) == M).all()
+    np.testing.assert_allclose(plan.r.sum(axis=1), 1.0, atol=1e-12)

@@ -39,6 +39,8 @@ for arch, kind in [("qwen3-0.6b", "train"), ("xlstm-125m", "decode"), ("deepseek
         jitted = jax.jit(step_fn, in_shardings=in_sh, out_shardings=out_sh)
         compiled = jitted.lower(state_shape, specs).compile()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # older jax returns one dict per device
+        cost = cost[0] if cost else {}
     colls = rl.parse_collectives(compiled.as_text())
     results[arch] = {
         "flops": cost.get("flops", 0.0),
