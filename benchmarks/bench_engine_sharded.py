@@ -1,0 +1,97 @@
+"""Sharded batched round engine: throughput + per-device staged bytes vs
+mesh size.
+
+The engine's client axis is embarrassingly parallel — with a mesh, each
+data-parallel group plays one sampled client and the staged dataset is
+sharded over its client axis, so per-device pinned bytes shrink with the
+mesh while the round stays one jitted step (the weighted aggregation is the
+single cross-client collective).
+
+Usage (module form — `benchmarks` is a package):
+  PYTHONPATH=src python -m benchmarks.bench_engine_sharded [--smoke]
+
+Run standalone, the module forces a 4-device host platform before jax
+initializes; under ``benchmarks.run`` (jax already up) it degrades to the
+mesh sizes the visible devices allow. Host-platform "devices" are threads
+carved out of the same CPU, so wall-clock on this sweep measures collective
+overhead, not scaling — the per-device staged bytes column is the
+hardware-independent signal; throughput gains need real multi-chip meshes.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+if "jax" not in sys.modules:  # standalone run: give ourselves a host mesh
+    os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
+
+def _rounds_per_sec(dataset, m: int, mesh_spec, *, rounds: int, dim: int, cfg_kw):
+    from repro.core import MDSampler
+    from repro.fl import FLConfig, FederatedServer
+    from repro.models.simple import init_mlp
+    from repro.optim import sgd
+
+    params = init_mlp((dim, 32, 10), seed=1)
+    cfg = FLConfig(
+        n_rounds=rounds, seed=0, eval_every=10**9, engine="batched",
+        mesh_spec=mesh_spec, **cfg_kw,
+    )
+    srv = FederatedServer(
+        dataset, MDSampler(dataset.population, m, seed=0), params, sgd(0.05), cfg
+    )
+    srv.run_round(0)  # warm-up: compile
+    t0 = time.perf_counter()
+    for t in range(1, rounds + 1):
+        srv.run_round(t)
+    return rounds / (time.perf_counter() - t0), srv._engine.per_device_staged_bytes()
+
+
+def main(argv: "list[str] | None" = None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="tiny sizes for CI")
+    # programmatic callers (benchmarks.run) pass no argv and get defaults
+    args = ap.parse_args([] if argv is None else argv)
+
+    import jax
+
+    from benchmarks.bench_round_engine import _dataset
+    from benchmarks.common import emit
+    from repro.fl.engine import staged_bytes
+
+    dim, m = 16, 8
+    rounds = 3 if args.smoke else 10
+    cfg_kw = dict(
+        n_local_steps=4 if args.smoke else 10, batch_size=16 if args.smoke else 32
+    )
+    dataset = _dataset(n_clients=80, dim=dim, per_client=50 if args.smoke else 200)
+    avail = jax.local_device_count()
+    sizes = [d for d in (1, 2, 4) if d <= avail]
+    total = staged_bytes(dataset, m, cfg_kw["n_local_steps"], cfg_kw["batch_size"])
+
+    base_rps = None
+    for d in sizes:
+        spec = None if d == 1 else f"{d}x1"
+        rps, per_dev = _rounds_per_sec(
+            dataset, m, spec, rounds=rounds, dim=dim, cfg_kw=cfg_kw
+        )
+        base_rps = base_rps or rps
+        emit(
+            f"engine_sharded/mesh={d}x1",
+            1e6 / rps,
+            f"us per round; per_device_staged={per_dev / 2**20:.2f}MiB "
+            f"(total_estimate={total / 2**20:.2f}MiB); speedup={rps / base_rps:.2f}x",
+        )
+    if len(sizes) == 1:
+        emit(
+            "engine_sharded/single_device_only",
+            0.0,
+            "run standalone (module sets --xla_force_host_platform_device_count=4) "
+            "for the multi-device sweep",
+        )
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

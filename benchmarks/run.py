@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   bench_kernels        — Pallas kernel paths + oracles
   bench_fl_collectives — communication accounting (paper's motivation)
   bench_round_engine   — batched on-device round engine vs compat loop
+  bench_engine_sharded — mesh-sharded engine: per-device staged bytes sweep
 """
 from __future__ import annotations
 
@@ -19,6 +20,7 @@ import traceback
 from benchmarks import (
     ablations,
     bench_dryrun_roofline,
+    bench_engine_sharded,
     bench_fl_collectives,
     bench_kernels,
     bench_round_engine,
@@ -33,6 +35,7 @@ MODULES = [
     ("table_variance", table_variance),
     ("bench_sampler_cost", bench_sampler_cost),
     ("bench_round_engine", bench_round_engine),
+    ("bench_engine_sharded", bench_engine_sharded),
     ("bench_fl_collectives", bench_fl_collectives),
     ("bench_kernels", bench_kernels),
     ("bench_dryrun_roofline", bench_dryrun_roofline),

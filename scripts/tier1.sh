@@ -15,5 +15,6 @@ python -m pytest -q
 echo "== tier-1: benchmark smoke (import + run sanity) =="
 python -m benchmarks.bench_sampler_cost --smoke
 python -m benchmarks.bench_round_engine --smoke
+python -m benchmarks.bench_engine_sharded --smoke
 
 echo "tier-1 OK"

@@ -116,9 +116,10 @@ class Algorithm2Sampler(ClusteredSampler):
 
         ``distance_fn`` selects the O(n²d) pairwise-distance backend: a
         backend name (``"auto"`` — the default device path: compiled Pallas
-        on TPU/GPU, interpret-mode Pallas on CPU; ``"pallas"``;
-        ``"pallas-interpret"``; ``"numpy"``), a custom callable, or ``None``
-        for the numpy host reference."""
+        on TPU, interpret-mode Pallas everywhere else, GPU included — the
+        kernel's VMEM scratch is TPU-only; ``"pallas"`` — TPU only, errors
+        elsewhere; ``"pallas-interpret"``; ``"numpy"``), a custom callable,
+        or ``None`` for the numpy host reference."""
         self.measure = measure
         self.update_dim = int(update_dim)
         self._distance_fn = _resolve_distance_fn(distance_fn)

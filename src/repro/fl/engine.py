@@ -28,6 +28,17 @@ RNG discipline matches the compat loop exactly: batch indices are drawn
 from the server's host rng per distinct client, in distinct order, and
 padded slots consume no randomness — so the same seed yields the same
 realized batches on both paths.
+
+Mesh sharding (``mesh=`` on the engine / ``batched_round_step``): the round
+is embarrassingly parallel over clients — each data-parallel group plays
+one sampled client (the ``launch.fl_train`` pattern). With a mesh, the
+``m_slots`` client axis (slot ids, batch indices, weights, the gathered
+per-client data blocks and the vmapped per-client models) is constrained
+onto the mesh's batch axes; the staged dataset is sharded over its client
+axis so per-device pinned bytes shrink with mesh size; the eq. 3/4 weighted
+aggregation is the single cross-client collective and the new global model
+comes back replicated. ``mesh=None`` (default) places no constraints —
+bit-for-bit the single-device behavior.
 """
 from __future__ import annotations
 
@@ -36,21 +47,60 @@ import functools
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.fl.aggregation import aggregate_stacked, flatten_params
 from repro.fl.client import LossFn, local_steps
+from repro.launch.mesh import data_parallel_degree, leading_batch_spec
 from repro.optim.base import Optimizer
 
 
-def staged_bytes(dataset) -> int:
-    """Device bytes the engine pins for ``dataset``: every client padded to
-    the largest client (f32 features + i32 labels)."""
+def _staged_dtypes(dataset) -> tuple[np.dtype, np.dtype]:
+    """Dtypes the engine actually stages for ``dataset``.
+
+    Floating features at or below 4 bytes keep their dtype; everything else
+    (f64 — which jax would silently downcast anyway — and integer image
+    bytes, which the dense matmul needs as floats) becomes f32. Integer
+    labels at or below 4 bytes keep their dtype; wider ones become i32.
+    """
+    xd = np.dtype(dataset.clients[0].x_train.dtype)
+    yd = np.dtype(dataset.clients[0].y_train.dtype)
+    feat = xd if (xd.kind == "f" and xd.itemsize <= 4) else np.dtype(np.float32)
+    lab = yd if (yd.kind in "iu" and yd.itemsize <= 4) else np.dtype(np.int32)
+    return feat, lab
+
+
+def staged_bytes(
+    dataset, m_slots: int = 0, n_steps: int = 0, batch_size: int = 0, mesh=None
+) -> int:
+    """*Per-device* bytes the engine pins for ``dataset``: every client
+    padded to the largest client, in the dtypes the engine actually stages
+    (see :func:`_staged_dtypes`), plus the per-round ``(m_slots, n_steps,
+    batch_size)`` i32 batch-index block the server ships each round.
+
+    With ``mesh``, each term shrinks by the data-parallel degree when its
+    leading axis divides it — mirroring how the engine actually shards (it
+    stages replicated on uneven client counts)."""
     n_pad = max(c.n_train for c in dataset.clients)
     feat = int(np.prod(dataset.clients[0].x_train.shape[1:]))
-    return dataset.n_clients * n_pad * (feat * 4 + 4)
+    feat_dt, label_dt = _staged_dtypes(dataset)
+    data = dataset.n_clients * n_pad * (feat * feat_dt.itemsize + label_dt.itemsize)
+    idx = m_slots * n_steps * batch_size * np.dtype(np.int32).itemsize
+    if mesh is not None:
+        n_dp = data_parallel_degree(mesh)
+        if dataset.n_clients % n_dp == 0:
+            data //= n_dp
+        if m_slots % n_dp == 0:
+            idx //= n_dp
+    return data + idx
 
 
-@functools.partial(jax.jit, static_argnames=("loss_fn", "opt", "fedprox_mu"))
+def _client_spec(mesh, ndim: int) -> NamedSharding:
+    """Leading axis on the mesh's batch axes, trailing dims replicated."""
+    return NamedSharding(mesh, leading_batch_spec(mesh, ndim))
+
+
+@functools.partial(jax.jit, static_argnames=("loss_fn", "opt", "fedprox_mu", "mesh"))
 def batched_round_step(
     global_params,
     x_all: jnp.ndarray,  # (n, n_pad, …) stacked client features
@@ -63,23 +113,41 @@ def batched_round_step(
     loss_fn: LossFn,
     opt: Optimizer,
     fedprox_mu: float = 0.0,
+    mesh=None,
 ):
     """One full FL round on device.
 
     Returns (new_global_params, (m_slots, d) flat updates, (m_slots,) mean
     local losses). Padded slots train on client 0's data with weight 0 —
     their outputs are discarded by the caller.
+
+    ``mesh`` (a static :class:`jax.sharding.Mesh`, or ``None``) shards the
+    ``m_slots`` client axis over the mesh's batch axes via sharding
+    constraints: every per-slot array — and the vmapped per-client model
+    copies — lives on its data-parallel group, the weighted aggregation is
+    the one cross-client collective, and the aggregated model plus the
+    global params stay replicated over the model axes.
     """
-    x = x_all[slot_ids]
-    y = y_all[slot_ids]
+    if mesh is None:
+        cl = lambda a: a
+        repl = cl
+    else:
+        cl = lambda a: jax.lax.with_sharding_constraint(a, _client_spec(mesh, a.ndim))
+        repl = lambda a: jax.lax.with_sharding_constraint(a, NamedSharding(mesh, P()))
+    slot_ids, batch_idx, weights = cl(slot_ids), cl(batch_idx), cl(weights)
+    x = cl(x_all[slot_ids])
+    y = cl(y_all[slot_ids])
 
     def one_client(xc, yc, idxc):
         return local_steps(global_params, xc, yc, idxc, loss_fn, opt, fedprox_mu)
 
     client_params, losses = jax.vmap(one_client)(x, y, batch_idx)
+    client_params = jax.tree_util.tree_map(cl, client_params)
+    losses = cl(losses)
     new_params = aggregate_stacked(global_params, client_params, weights, stale_weight)
+    new_params = jax.tree_util.tree_map(repl, new_params)
     flat_global = flatten_params(global_params)
-    updates = jax.vmap(lambda cp: flatten_params(cp) - flat_global)(client_params)
+    updates = cl(jax.vmap(lambda cp: flatten_params(cp) - flat_global)(client_params))
     return new_params, updates, losses
 
 
@@ -88,25 +156,53 @@ class BatchedRoundEngine:
     rounds through :func:`batched_round_step`.
 
     ``m_slots`` fixes the padded client axis (normally the sampler's m).
+    ``mesh`` shards the staged dataset over its client axis (when the client
+    count divides the mesh's data-parallel degree; replicated otherwise) and
+    runs every round with the slot axis sharded — see the module docstring.
     """
 
-    def __init__(self, dataset, m_slots: int, n_steps: int, batch_size: int):
+    def __init__(self, dataset, m_slots: int, n_steps: int, batch_size: int, *, mesh=None):
         if m_slots <= 0:
             raise ValueError("m_slots must be positive")
         self.m_slots = int(m_slots)
         self.n_steps = int(n_steps)
         self.batch_size = int(batch_size)
+        self.mesh = mesh
         self._n_train = np.array([c.n_train for c in dataset.clients])
         n_pad = int(self._n_train.max())
         feat = dataset.clients[0].x_train.shape[1:]
-        x_all = np.zeros((dataset.n_clients, n_pad) + feat, dtype=np.float32)
-        y_all = np.zeros((dataset.n_clients, n_pad), dtype=np.int32)
+        feat_dt, label_dt = _staged_dtypes(dataset)
+        x_all = np.zeros((dataset.n_clients, n_pad) + feat, dtype=feat_dt)
+        y_all = np.zeros((dataset.n_clients, n_pad), dtype=label_dt)
         for i, c in enumerate(dataset.clients):
             x_all[i, : c.n_train] = c.x_train
             y_all[i, : c.n_train] = c.y_train
         # device-resident for the whole run; per-round traffic is indices only
-        self._x_all = jnp.asarray(x_all)
-        self._y_all = jnp.asarray(y_all)
+        if mesh is None:
+            self._x_all = jnp.asarray(x_all)
+            self._y_all = jnp.asarray(y_all)
+        else:
+            n_dp = data_parallel_degree(mesh)
+            if dataset.n_clients % n_dp == 0:
+                x_sh = _client_spec(mesh, x_all.ndim)
+                y_sh = _client_spec(mesh, y_all.ndim)
+            else:  # uneven client count: stage replicated, still shard the round
+                x_sh = NamedSharding(mesh, P())
+                y_sh = NamedSharding(mesh, P())
+            self._x_all = jax.device_put(x_all, x_sh)
+            self._y_all = jax.device_put(y_all, y_sh)
+
+    def per_device_staged_bytes(self) -> int:
+        """Measured bytes the busiest device pins for the staged dataset.
+
+        The per-round batch-index block is a transient, not counted here —
+        :func:`staged_bytes` is the planning-time estimate that includes it.
+        """
+        per_device: dict = {}
+        for arr in (self._x_all, self._y_all):
+            for shard in arr.addressable_shards:
+                per_device[shard.device] = per_device.get(shard.device, 0) + shard.data.nbytes
+        return max(per_device.values())
 
     def run_round(
         self,
@@ -146,6 +242,7 @@ class BatchedRoundEngine:
             loss_fn=loss_fn,
             opt=opt,
             fedprox_mu=fedprox_mu,
+            mesh=self.mesh,
         )
         # slice on the host: device slicing with the round-varying c would
         # trigger a fresh compile per distinct-count

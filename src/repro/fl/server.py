@@ -32,6 +32,7 @@ from repro.fl.aggregation import aggregate_round, flatten_params
 from repro.fl.client import draw_batch_indices, local_update
 from repro.fl.engine import BatchedRoundEngine, staged_bytes
 from repro.fl.history import History, RoundRecord
+from repro.launch.mesh import resolve_fl_mesh
 from repro.models.simple import accuracy, classification_loss
 from repro.optim.base import Optimizer
 
@@ -49,10 +50,16 @@ class FLConfig:
     # exceeds this budget the server falls back to the memory-lean compat
     # loop with a warning — both paths are numerically equivalent.
     max_staged_bytes: int = 2 << 30
+    # Mesh for the batched engine's client axis: None (single-device,
+    # default), "auto" (all local devices on "data"), "DxM" / (D, M) host
+    # mesh shapes, or a jax.sharding.Mesh. See repro.launch.mesh.
+    # resolve_fl_mesh and the engine module docstring. Ignored by "compat".
+    mesh_spec: "str | tuple[int, int] | None" = None
 
 
 class EmptyRoundError(ValueError):
-    """The sampler produced zero distinct clients for a round."""
+    """The sampler produced nothing to aggregate for a round: zero distinct
+    clients, or distinct clients whose realized weights sum to zero."""
 
 
 class FederatedServer:
@@ -78,20 +85,33 @@ class FederatedServer:
         self._rng = np.random.default_rng(config.seed)
         self.history = History()
         self._x_test, self._y_test = dataset.global_test()
+        # classes each client can contribute — O(total samples) once, so the
+        # per-round distinct-class count is a union of tiny class sets
+        self._client_classes = [np.unique(c.y_train) for c in dataset.clients]
         use_batched = config.engine == "batched"
-        if use_batched and staged_bytes(dataset) > config.max_staged_bytes:
+        mesh = resolve_fl_mesh(config.mesh_spec) if use_batched else None
+        # budget check against the *per-device* footprint: a mesh that shards
+        # the client axis is exactly how huge datasets stay stageable
+        need = staged_bytes(
+            dataset, sampler.m, config.n_local_steps, config.batch_size, mesh=mesh
+        )
+        if use_batched and need > config.max_staged_bytes:
             fmt = lambda b: f"{b / 2**30:.2f} GiB" if b >= 2**30 else f"{b / 2**20:.2f} MiB"
             warnings.warn(
-                f"batched engine would stage {fmt(staged_bytes(dataset))} of padded "
-                f"client data on device (budget {fmt(config.max_staged_bytes)}); "
+                f"batched engine would stage {fmt(need)} of padded "
+                f"client data per device (budget {fmt(config.max_staged_bytes)}); "
                 "falling back to the compat loop — raise FLConfig.max_staged_bytes "
-                "to override",
+                "or shard further via FLConfig.mesh_spec to override",
                 stacklevel=2,
             )
             use_batched = False
         self._engine = (
             BatchedRoundEngine(
-                dataset, sampler.m, config.n_local_steps, config.batch_size
+                dataset,
+                sampler.m,
+                config.n_local_steps,
+                config.batch_size,
+                mesh=mesh,
             )
             if use_batched
             else None
@@ -135,6 +155,12 @@ class FederatedServer:
                 "train or aggregate"
             )
         weights = result.agg_weights[distinct]
+        if weights.sum() <= 0:
+            raise EmptyRoundError(
+                f"round {t}: realized aggregation weights of the {distinct.size} "
+                "distinct clients sum to zero — aggregating (and averaging the "
+                "round loss) over them is undefined"
+            )
 
         if self._engine is not None:
             self.params, updates_flat, losses = self._engine.run_round(
@@ -156,9 +182,7 @@ class FederatedServer:
         self.sampler.observe_updates(distinct, updates_flat)
 
         classes = np.unique(
-            np.concatenate(
-                [self.dataset.clients[int(c)].y_train for c in distinct]
-            )
+            np.concatenate([self._client_classes[int(c)] for c in distinct])
         )
         test_acc = (
             float(self.acc_fn(self.params, jnp.asarray(self._x_test), jnp.asarray(self._y_test)))
@@ -167,7 +191,7 @@ class FederatedServer:
         )
         rec = RoundRecord(
             round=t,
-            train_loss=float(np.average(losses, weights=weights / weights.sum())),
+            train_loss=float(np.average(losses, weights=weights)),
             test_acc=test_acc,
             n_distinct_clients=len(distinct),
             n_distinct_classes=len(classes),

@@ -47,9 +47,10 @@ def resolve_distance_backend(backend: str = "auto"):
     """Pick the pairwise-distance backend for Algorithm 2's O(n²d) stage.
 
     * ``"auto"``     — compiled Pallas kernel on TPU, interpret-mode Pallas
-      everywhere else (same code path, jax-ops execution; the kernel's
-      VMEM scratch / mosaic block specs are TPU-only).
-    * ``"pallas"``   — compiled Pallas kernel, no fallback.
+      everywhere else — including GPU (same code path, jax-ops execution;
+      the kernel's ``pltpu.VMEM`` scratch / mosaic block specs are
+      TPU-only, so there is no compiled GPU path).
+    * ``"pallas"``   — compiled Pallas kernel; TPU only, errors elsewhere.
     * ``"pallas-interpret"`` — interpret-mode Pallas anywhere (tests).
     * ``"numpy"``    — the f64 host reference
       (:func:`repro.core.clustering.similarity.pairwise_distances`).
@@ -63,6 +64,15 @@ def resolve_distance_backend(backend: str = "auto"):
 
         return make_distance_fn(interpret=jax.default_backend() != "tpu")
     if backend == "pallas":
+        import jax
+
+        if jax.default_backend() != "tpu":
+            raise RuntimeError(
+                "distance backend 'pallas' requires a TPU — the kernel's "
+                "pltpu.VMEM scratch and mosaic block specs do not lower on "
+                f"{jax.default_backend()!r}; use 'auto' (interpret-mode "
+                "fallback) or 'pallas-interpret' instead"
+            )
         return make_distance_fn(interpret=False)
     if backend == "pallas-interpret":
         return make_distance_fn(interpret=True)

@@ -24,8 +24,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ARCH_NAMES, get_config
 from repro.launch import roofline as rl
-from repro.launch.fl_train import fl_input_specs, make_fl_round_step
-from repro.launch.mesh import batch_axes, make_production_mesh, mesh_chips
+from repro.launch.fl_train import fl_input_specs, fl_round_shardings, make_fl_round_step
+from repro.launch.mesh import data_parallel_degree, make_production_mesh, mesh_chips
 from repro.launch.sharding import param_shardings, replicated
 from repro.launch.steps import abstract_params
 from repro.models.config import INPUT_SHAPES
@@ -48,8 +48,7 @@ def run_fl_round(
     cfg = apply_variants(get_config(arch), variants or [])
     mesh = make_production_mesh(multi_pod=multi_pod)
     chips = mesh_chips(mesh)
-    dp = batch_axes(mesh)
-    m = int(np.prod([mesh.shape[a] for a in dp]))  # one client per data group
+    m = data_parallel_degree(mesh)  # one client per data group
     local_batch = global_batch // m
 
     step_fn = make_fl_round_step(cfg, lr=1e-2, n_local_steps=n_local)
@@ -62,12 +61,7 @@ def run_fl_round(
         lambda s: NamedSharding(mesh, P(*[e if e == "model" else None for e in s.spec])),
         p_sh,
     )
-    dp_spec = dp if len(dp) > 1 else dp[0]
-    batch_sh = {
-        "client_tokens": NamedSharding(mesh, P(dp_spec, None, None, None)),
-        "client_targets": NamedSharding(mesh, P(dp_spec, None, None, None)),
-        "weights": NamedSharding(mesh, P(None)),
-    }
+    batch_sh = fl_round_shardings(mesh)
     loss_sh = replicated(mesh, jax.eval_shape(lambda: jnp.zeros(())))
 
     # NOTE: the in-model sequence-parallel constraints (sharding_hints) are

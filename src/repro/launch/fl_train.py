@@ -84,6 +84,21 @@ def fl_input_specs(cfg: ModelConfig, m: int, n_local: int, batch: int, seq: int)
     }
 
 
+def fl_round_shardings(mesh):
+    """NamedShardings for :func:`fl_round_step`'s batch: the client axis on
+    the mesh's batch axes (each data-parallel group plays one sampled
+    client), weights replicated — shared by the dry-run and the host driver."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.launch.mesh import leading_batch_spec
+
+    return {
+        "client_tokens": NamedSharding(mesh, leading_batch_spec(mesh, 4)),
+        "client_targets": NamedSharding(mesh, leading_batch_spec(mesh, 4)),
+        "weights": NamedSharding(mesh, P(None)),
+    }
+
+
 # --------------------------------------------------------------------------
 # host-side driver (single process; production path is the same jit with a
 # production mesh — exercised by the dry-run's fl_round mode)
@@ -101,12 +116,20 @@ class FLLMConfig:
     seed: int = 0
 
 
-def run_federated_lm(cfg: ModelConfig, fl: FLLMConfig, sampler: ClientSampler) -> list[float]:
+def run_federated_lm(
+    cfg: ModelConfig, fl: FLLMConfig, sampler: ClientSampler, *, mesh=None
+) -> list[float]:
     """Federated LM training over synthetic per-client token streams.
 
     Each client owns a token stream with a client-specific structure (stride
     pattern) — heterogeneous in the same sense as the paper's non-iid
     labels. Returns the per-round mean local loss.
+
+    With ``mesh``, the jit pins the client axis of every round's batch onto
+    the mesh's batch axes via :func:`fl_round_shardings` (params replicated
+    across them; the data-parallel degree must divide ``fl.m`` so every
+    group plays at least one whole client) — the same placement the
+    pod-scale dry-run (``launch.dryrun_fl``) lowers.
     """
     from repro.data.tokens import TokenPipeline
 
@@ -116,7 +139,32 @@ def run_federated_lm(cfg: ModelConfig, fl: FLLMConfig, sampler: ClientSampler) -
         for c in range(fl.n_clients)
     ]
     params = mdl.init_params(cfg, jax.random.PRNGKey(fl.seed))
-    round_step = jax.jit(make_fl_round_step(cfg, fl.lr, fl.n_local_steps))
+    step_fn = make_fl_round_step(cfg, fl.lr, fl.n_local_steps)
+    if mesh is None:
+        round_step = jax.jit(step_fn)
+    else:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.launch.mesh import data_parallel_degree
+
+        n_dp = data_parallel_degree(mesh)
+        if fl.m % n_dp != 0:
+            raise ValueError(
+                f"fl.m={fl.m} must be a multiple of the mesh's data-parallel "
+                f"degree {n_dp} — the jit shards the client axis over it, so "
+                "each data group must play a whole number of clients"
+            )
+        batch_sh = fl_round_shardings(mesh)
+        repl = jax.tree_util.tree_map(lambda _: NamedSharding(mesh, P()), params)
+        round_step = jax.jit(
+            step_fn,
+            in_shardings=(
+                repl,
+                batch_sh["client_tokens"],
+                batch_sh["client_targets"],
+                batch_sh["weights"],
+            ),
+        )
 
     del rng
     losses = []

@@ -161,7 +161,7 @@ def fl_engine_input_specs(
     n_clients: int,
     m_slots: int,
     n_pad: int,
-    feat_dim: int,
+    feat_shape: "int | tuple[int, ...]",
     n_steps: int,
     batch_size: int,
 ) -> dict[str, Any]:
@@ -169,10 +169,13 @@ def fl_engine_input_specs(
 
     Mirrors :func:`input_specs`: zero device allocation, shardable — the
     client axis (``m_slots``) is the natural data-parallel axis (each group
-    plays one sampled client, as in ``launch.fl_train``)."""
+    plays one sampled client, as in ``launch.fl_train``). ``feat_shape`` is
+    the per-sample feature shape: an int for flat feature vectors, a tuple
+    (e.g. ``(32, 32, 3)``) for image-shaped clients."""
+    fs = (feat_shape,) if isinstance(feat_shape, int) else tuple(feat_shape)
     f32, i32 = jnp.float32, jnp.int32
     return {
-        "x_all": jax.ShapeDtypeStruct((n_clients, n_pad, feat_dim), f32),
+        "x_all": jax.ShapeDtypeStruct((n_clients, n_pad, *fs), f32),
         "y_all": jax.ShapeDtypeStruct((n_clients, n_pad), i32),
         "slot_ids": jax.ShapeDtypeStruct((m_slots,), i32),
         "batch_idx": jax.ShapeDtypeStruct((m_slots, n_steps, batch_size), i32),
@@ -181,8 +184,35 @@ def fl_engine_input_specs(
     }
 
 
-def make_fl_engine_step(loss_fn, opt: Optional[Optimizer] = None, *, fedprox_mu: float = 0.0):
-    """(params, batch) wrapper around the batched FL round for lowering."""
+def fl_engine_shardings(mesh, specs: dict[str, Any]) -> dict[str, Any]:
+    """NamedShardings for :func:`fl_engine_input_specs` on ``mesh``.
+
+    The client-count axis of the staged data and the ``m_slots`` slot axes
+    ride the mesh's batch axes (replicated when they don't divide the
+    data-parallel degree); scalars replicate — the same layout
+    ``BatchedRoundEngine(..., mesh=...)`` stages at runtime."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.launch.mesh import data_parallel_degree, leading_batch_spec
+
+    n_dp = data_parallel_degree(mesh)
+    out = {}
+    for key, spec in specs.items():
+        if spec.shape and spec.shape[0] % n_dp == 0:
+            out[key] = NamedSharding(mesh, leading_batch_spec(mesh, len(spec.shape)))
+        else:
+            out[key] = NamedSharding(mesh, P())
+    return out
+
+
+def make_fl_engine_step(
+    loss_fn, opt: Optional[Optimizer] = None, *, fedprox_mu: float = 0.0, mesh=None
+):
+    """(params, batch) wrapper around the batched FL round for lowering.
+
+    ``mesh`` is forwarded to :func:`repro.fl.engine.batched_round_step` so
+    the dry-run / lowering harness exercises the sharded round exactly as
+    the server runs it."""
     from repro.fl.engine import batched_round_step
 
     o = opt or default_optimizer()
@@ -199,6 +229,7 @@ def make_fl_engine_step(loss_fn, opt: Optional[Optimizer] = None, *, fedprox_mu:
             loss_fn=loss_fn,
             opt=o,
             fedprox_mu=fedprox_mu,
+            mesh=mesh,
         )
 
     return fl_engine_step

@@ -48,6 +48,38 @@ def test_pairwise_distance_zero_rows():
     np.testing.assert_allclose(dev[0, 2], np.pi / 2, atol=1e-6)
 
 
+@pytest.mark.parametrize("measure", ["arccos", "l2", "l1"])
+def test_pairwise_zero_rows_parity_with_numpy_reference(measure):
+    """Cold-start clients (never sampled) carry all-zero representative
+    gradients: the device path must match the numpy reference exactly on
+    mixed zero/non-zero G, including arccos's zero-vs-zero -> 0 and
+    zero-vs-nonzero -> pi/2 conventions."""
+    G = RNG.normal(size=(9, 24)).astype(np.float32)
+    G[[0, 3, 7]] = 0.0  # never-sampled clients
+    dev = np.asarray(
+        pairwise_distances_device(G, measure, block_n=8, block_d=16, interpret=True)
+    )
+    ref = np_pairwise(G, measure)
+    np.testing.assert_allclose(dev, ref, atol=1e-5)
+    if measure == "arccos":
+        assert dev[0, 3] == 0.0 and dev[3, 7] == 0.0
+        np.testing.assert_allclose(dev[0, 1], np.pi / 2, atol=1e-6)
+        np.testing.assert_allclose(dev[7, 2], np.pi / 2, atol=1e-6)
+
+
+def test_pallas_backend_requires_tpu():
+    """The compiled kernel uses pltpu.VMEM scratch — requesting it off-TPU
+    must be a clear error, not a mosaic traceback at first distance call."""
+    import jax
+
+    from repro.kernels.similarity.ops import resolve_distance_backend
+
+    if jax.default_backend() == "tpu":
+        pytest.skip("compiled pallas is legitimate on TPU")
+    with pytest.raises(RuntimeError, match="requires a TPU"):
+        resolve_distance_backend("pallas")
+
+
 # --------------------------------------------------------------------------
 # aggregate
 # --------------------------------------------------------------------------

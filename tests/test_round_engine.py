@@ -120,7 +120,7 @@ def test_fl_engine_step_lowers_from_specs():
     from repro.models.simple import classification_loss
 
     specs = fl_engine_input_specs(
-        n_clients=8, m_slots=4, n_pad=20, feat_dim=16, n_steps=3, batch_size=8
+        n_clients=8, m_slots=4, n_pad=20, feat_shape=16, n_steps=3, batch_size=8
     )
     step = make_fl_engine_step(classification_loss, sgd(0.1))
     params = init_mlp((16, 32, 10), seed=0)
@@ -129,6 +129,83 @@ def test_fl_engine_step_lowers_from_specs():
     assert updates.shape == (4, d)
     assert losses.shape == (4,)
     assert jax.tree_util.tree_structure(new_params) == jax.tree_util.tree_structure(params)
+
+
+def _image_loss(params, x, y, *prox_args):
+    """Flatten image-shaped features before the MLP (CIFAR-style clients)."""
+    from repro.models.simple import classification_loss, fedprox_loss
+
+    flat = x.reshape(x.shape[0], -1)
+    if prox_args:
+        return fedprox_loss(params, flat, y, *prox_args)
+    return classification_loss(params, flat, y)
+
+
+def test_fl_engine_step_lowers_image_shaped_clients():
+    """Tuple feat_shape: (H, W, C) clients lower through the same hooks."""
+    import jax
+
+    from repro.launch.steps import fl_engine_input_specs, make_fl_engine_step
+
+    specs = fl_engine_input_specs(
+        n_clients=6, m_slots=4, n_pad=12, feat_shape=(4, 4, 3), n_steps=2, batch_size=6
+    )
+    assert specs["x_all"].shape == (6, 12, 4, 4, 3)
+    step = make_fl_engine_step(_image_loss, sgd(0.1))
+    params = init_mlp((48, 24, 10), seed=0)
+    new_params, updates, losses = jax.eval_shape(step, params, specs)
+    d = sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(params))
+    assert updates.shape == (4, d)
+    assert losses.shape == (4,)
+    del new_params
+
+
+def test_staged_bytes_counts_index_block_and_dtypes():
+    """The footprint estimate must match what the engine actually stages:
+    native (narrow) dtypes plus the per-round (m, N, B) i32 index block."""
+    from repro.data.federated import ClientData, FederatedDataset
+    from repro.fl.engine import staged_bytes
+
+    rng = np.random.default_rng(0)
+    clients = [
+        ClientData(
+            x_train=rng.normal(size=(30, 8)).astype(np.float32),
+            y_train=rng.integers(0, 10, size=30).astype(np.int8),
+            x_test=np.zeros((2, 8), np.float32),
+            y_test=np.zeros(2, np.int8),
+        )
+        for _ in range(4)
+    ]
+    ds = FederatedDataset(clients)
+    # 4 clients x 30 rows x (8 f32 features + 1 int8 label)
+    base = 4 * 30 * (8 * 4 + 1)
+    assert staged_bytes(ds) == base
+    assert staged_bytes(ds, m_slots=3, n_steps=5, batch_size=7) == base + 3 * 5 * 7 * 4
+
+    eng = BatchedRoundEngine(ds, m_slots=3, n_steps=5, batch_size=7)
+    assert eng._x_all.nbytes + eng._y_all.nbytes == base
+    assert eng._y_all.dtype == np.int8
+
+
+class _ZeroWeightSampler(ClientSampler):
+    """Degenerate sampler: selects clients but gives them zero weight."""
+
+    def sample(self, round_idx):
+        del round_idx
+        n = self.population.n_clients
+        return SampleResult(
+            clients=np.arange(3, dtype=np.int64), agg_weights=np.zeros(n)
+        )
+
+
+@pytest.mark.parametrize("engine", ["batched", "compat"])
+def test_zero_realized_weight_raises_instead_of_nan_loss(dataset, engine):
+    """A round whose realized weights sum to 0 must fail loudly, not log a
+    silent NaN train_loss (0/0 in the weighted average)."""
+    srv = _server(dataset, _ZeroWeightSampler(dataset.population, 10), engine, rounds=1)
+    with pytest.raises(EmptyRoundError, match="sum to zero"):
+        srv.run_round(0)
+    assert len(srv.history.records) == 0
 
 
 def test_staging_budget_falls_back_to_compat(dataset):

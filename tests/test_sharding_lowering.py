@@ -47,6 +47,38 @@ for arch, kind in [("qwen3-0.6b", "train"), ("xlstm-125m", "decode"), ("deepseek
         "collective_bytes": sum(v["bytes"] for v in colls.values()),
         "mem_args": compiled.memory_analysis().argument_size_in_bytes,
     }
+
+# FL engine: the batched round with the client axis sharded over "data",
+# image-shaped clients, lowered from the same launch-layer hooks
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.launch.steps import fl_engine_input_specs, fl_engine_shardings, make_fl_engine_step
+from repro.models.simple import classification_loss, init_mlp
+from repro.optim import sgd
+
+
+def image_loss(params, x, y):
+    return classification_loss(params, x.reshape(x.shape[0], -1), y)
+
+
+specs = fl_engine_input_specs(
+    n_clients=8, m_slots=4, n_pad=16, feat_shape=(4, 4), n_steps=2, batch_size=8
+)
+sh = fl_engine_shardings(mesh, specs)
+fl_params = init_mlp((16, 32, 10), seed=0)
+p_repl = jax.tree_util.tree_map(lambda l: NamedSharding(mesh, P()), fl_params)
+p_abs = jax.tree_util.tree_map(lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), fl_params)
+step = make_fl_engine_step(image_loss, sgd(0.1), mesh=mesh)
+with mesh:
+    compiled = jax.jit(step, in_shardings=(p_repl, sh)).lower(p_abs, specs).compile()
+cost = compiled.cost_analysis()
+if isinstance(cost, (list, tuple)):
+    cost = cost[0] if cost else {}
+colls = rl.parse_collectives(compiled.as_text())
+results["fl_engine"] = {
+    "flops": cost.get("flops", 0.0),
+    "collective_bytes": sum(v["bytes"] for v in colls.values()),
+    "mem_args": compiled.memory_analysis().argument_size_in_bytes,
+}
 print(json.dumps(results))
 """
 
@@ -64,10 +96,18 @@ def lowering_results():
 
 
 def test_reduced_configs_lower_on_2x4_mesh(lowering_results):
-    assert set(lowering_results) == {"qwen3-0.6b", "xlstm-125m", "deepseek-v2-lite-16b"}
+    assert set(lowering_results) == {
+        "qwen3-0.6b", "xlstm-125m", "deepseek-v2-lite-16b", "fl_engine",
+    }
     for arch, rec in lowering_results.items():
         assert rec["flops"] > 0, arch
         assert rec["mem_args"] > 0, arch
+
+
+def test_fl_engine_lowers_sharded_with_one_collective_round(lowering_results):
+    """The batched FL round lowers with the client axis sharded over "data";
+    the weighted aggregation forces real cross-client communication."""
+    assert lowering_results["fl_engine"]["collective_bytes"] > 0
 
 
 def test_train_steps_emit_collectives(lowering_results):
