@@ -1,0 +1,154 @@
+"""Async re-clustering planner: round wall-time with Algorithm 2's rebuild
+on vs off the critical path, and streamed-similarity peak memory vs ``d``.
+
+Section 1 — planner overlap: the same FL run (batched engine, Algorithm 2
+sampler) with ``planner="sync"`` pays the O(n²d) distances + O(n³) Ward +
+urn filling *inside* every round; ``planner="async"`` hands the rebuild to
+a background worker and the round only pays a device scatter + snapshot.
+The acceptance target is a lower mean round wall-time for async at
+n >= 200 clients on CPU; per-round plan staleness is reported as the mean
+``plan_lag_rounds`` (0 for sync by construction).
+
+Section 2 — streamed similarity: the one-shot kernel pads the full (n, d)
+block to tile multiples before launching; ``pairwise_distances_streamed``
+pads one (n, d_chunk) slab at a time, so the padded peak stops growing
+with ``d``. Reported: the padded-slab peak bytes of each path (exact, from
+the kernel's block arithmetic) and wall time.
+
+Usage (module form — `benchmarks` is a package):
+  PYTHONPATH=src python -m benchmarks.bench_async_planner [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+
+
+def _dataset(n_clients: int, dim: int, per_client: int):
+    from repro.data.federated import ClientData, FederatedDataset
+
+    rng = np.random.default_rng(0)
+    clients = []
+    for _ in range(n_clients):
+        x = rng.normal(size=(per_client, dim)).astype(np.float32)
+        y = rng.integers(0, 10, size=per_client)
+        clients.append(ClientData(x_train=x, y_train=y, x_test=x[:8], y_test=y[:8]))
+    return FederatedDataset(clients)
+
+
+def _mean_round_time(dataset, planner: str, *, m: int, rounds: int, dim: int):
+    """(mean seconds per round after compile warm-up, mean plan lag)."""
+    from repro.core import Algorithm2Sampler
+    from repro.fl import FLConfig, FederatedServer
+    from repro.fl.aggregation import flatten_params
+    from repro.models.simple import init_mlp
+    from repro.optim import sgd
+
+    params = init_mlp((dim, 32, 10), seed=1)
+    d = int(flatten_params(params).shape[0])
+    sampler = Algorithm2Sampler(
+        dataset.population, m, update_dim=d, seed=0, planner=planner
+    )
+    cfg = FLConfig(
+        n_rounds=rounds, n_local_steps=10, batch_size=32,
+        seed=0, eval_every=10**9,
+    )
+    srv = FederatedServer(dataset, sampler, params, sgd(0.05), cfg)
+    srv.run_round(0)  # warm-up: engine compile + first rebuild
+    t0 = time.perf_counter()
+    for t in range(1, rounds + 1):
+        srv.run_round(t)
+    dt = (time.perf_counter() - t0) / rounds
+    lag = float(np.mean(srv.history.series("plan_lag_rounds")[1:]))
+    sampler.close()
+    return dt, lag
+
+
+def _padded_peak_bytes(n: int, d: int, block_n: int, block_d: int) -> int:
+    """Bytes of the padded f32 block a single kernel launch materializes
+    (mirrors pairwise_kernel's block arithmetic)."""
+    bn = min(block_n, max(8, n))
+    bd = min(block_d, max(8, d))
+    return (n + (-n % bn)) * (d + (-d % bd)) * 4
+
+
+def _streamed_sweep(d_values, *, n: int, d_chunk: int, block_n: int, block_d: int):
+    from benchmarks.common import timed
+    from repro.kernels.similarity.ops import (
+        pairwise_distances_device,
+        pairwise_distances_streamed,
+    )
+
+    rng = np.random.default_rng(1)
+    for d in d_values:
+        G = rng.normal(size=(n, d)).astype(np.float32)
+        one_shot = _padded_peak_bytes(n, d, block_n, block_d)
+        streamed = _padded_peak_bytes(n, min(d, d_chunk), block_n, block_d)
+        us_one, out_one = timed(
+            lambda: np.asarray(
+                pairwise_distances_device(
+                    G, "arccos", block_n=block_n, block_d=block_d, interpret=True
+                )
+            ),
+            repeats=2,
+        )
+        us_st, out_st = timed(
+            lambda: np.asarray(
+                pairwise_distances_streamed(
+                    G, "arccos", block_n=block_n, block_d=block_d,
+                    d_chunk=d_chunk, interpret=True,
+                )
+            ),
+            repeats=2,
+        )
+        np.testing.assert_allclose(out_one, out_st, atol=1e-4)
+        emit(
+            f"similarity_streamed/n={n}/d={d}/one_shot", us_one,
+            f"padded_peak={one_shot / 2**20:.2f}MiB",
+        )
+        emit(
+            f"similarity_streamed/n={n}/d={d}/streamed", us_st,
+            f"padded_peak={streamed / 2**20:.2f}MiB (chunk={d_chunk}); "
+            f"peak_ratio={one_shot / streamed:.1f}x",
+        )
+
+
+def main(argv: "list[str] | None" = None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="tiny sizes for CI")
+    # programmatic callers (benchmarks.run) pass no argv and get defaults;
+    # parse_args(None) would read the harness's own sys.argv and SystemExit
+    args = ap.parse_args([] if argv is None else argv)
+
+    dim = 16
+    ns = (40,) if args.smoke else (200, 400)
+    rounds = 2 if args.smoke else 6
+    for n in ns:
+        dataset = _dataset(n_clients=n, dim=dim, per_client=60)
+        secs, lags = {}, {}
+        for planner in ("sync", "async"):
+            secs[planner], lags[planner] = _mean_round_time(
+                dataset, planner, m=10, rounds=rounds, dim=dim
+            )
+        speedup = secs["sync"] / secs["async"]
+        emit(f"async_planner/n={n}/sync", secs["sync"] * 1e6, "us per round; lag=0")
+        emit(
+            f"async_planner/n={n}/async", secs["async"] * 1e6,
+            f"us per round; speedup={speedup:.2f}x "
+            f"mean_lag={lags['async']:.2f} rounds",
+        )
+
+    if args.smoke:
+        _streamed_sweep((96,), n=24, d_chunk=32, block_n=8, block_d=16)
+    else:
+        _streamed_sweep((512, 2048, 8192), n=128, d_chunk=512, block_n=128, block_d=128)
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(sys.argv[1:])

@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   bench_fl_collectives — communication accounting (paper's motivation)
   bench_round_engine   — batched on-device round engine vs compat loop
   bench_engine_sharded — mesh-sharded engine: per-device staged bytes sweep
+  bench_async_planner  — async re-clustering planner + streamed similarity
 """
 from __future__ import annotations
 
@@ -19,6 +20,7 @@ import traceback
 
 from benchmarks import (
     ablations,
+    bench_async_planner,
     bench_dryrun_roofline,
     bench_engine_sharded,
     bench_fl_collectives,
@@ -36,6 +38,7 @@ MODULES = [
     ("bench_sampler_cost", bench_sampler_cost),
     ("bench_round_engine", bench_round_engine),
     ("bench_engine_sharded", bench_engine_sharded),
+    ("bench_async_planner", bench_async_planner),
     ("bench_fl_collectives", bench_fl_collectives),
     ("bench_kernels", bench_kernels),
     ("bench_dryrun_roofline", bench_dryrun_roofline),

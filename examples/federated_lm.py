@@ -11,16 +11,26 @@ Run:  PYTHONPATH=src python examples/federated_lm.py [--sampler algorithm1]
 import argparse
 import dataclasses
 
+import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import Algorithm1Sampler, ClientPopulation, MDSampler
-from repro.launch.fl_train import FLLMConfig, run_federated_lm
+from repro.core import ClientPopulation
+from repro.fl.aggregation import flatten_params
+from repro.launch.fl_train import FLLMConfig, make_lm_sampler, run_federated_lm
+from repro.models import model as mdl
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--sampler", choices=("md", "algorithm1"), default="algorithm1")
+    ap.add_argument(
+        "--sampler", choices=("md", "algorithm1", "algorithm2"), default="algorithm1"
+    )
+    ap.add_argument(
+        "--planner", choices=("sync", "async"), default="sync",
+        help="algorithm2 only: rebuild the plan inline or overlapped with "
+        "the next round's local work",
+    )
     ap.add_argument("--rounds", type=int, default=8)
     args = ap.parse_args()
 
@@ -29,19 +39,24 @@ def main() -> None:
     fl = FLLMConfig(
         n_clients=16, m=4, n_rounds=args.rounds, n_local_steps=2,
         local_batch=2, seq_len=32, lr=0.1,
+        sampler=args.sampler, planner=args.planner,
     )
     pop = ClientPopulation(np.full(fl.n_clients, 1000))
-    sampler = (
-        MDSampler(pop, fl.m, seed=0)
-        if args.sampler == "md"
-        else Algorithm1Sampler(pop, fl.m, seed=0)
+    # only algorithm2's gradient store needs the flattened model size
+    d = (
+        int(flatten_params(mdl.init_params(cfg, jax.random.PRNGKey(0))).shape[0])
+        if args.sampler == "algorithm2"
+        else 0
     )
-    print(f"federated LM ({cfg.name}, {args.sampler}); {fl.n_clients} clients, m={fl.m}, "
-          f"N={fl.n_local_steps} local steps")
+    sampler = make_lm_sampler(fl, pop, update_dim=d)
+    print(f"federated LM ({cfg.name}, {args.sampler}"
+          + (f", planner={args.planner}" if args.sampler == "algorithm2" else "")
+          + f"); {fl.n_clients} clients, m={fl.m}, N={fl.n_local_steps} local steps")
     losses = run_federated_lm(cfg, fl, sampler)
     for t, l in enumerate(losses):
         print(f"  round {t:2d}  mean local loss {l:.4f}")
     print(f"improved: {losses[-1] < losses[0]}")
+    sampler.close()
 
 
 if __name__ == "__main__":

@@ -16,5 +16,6 @@ echo "== tier-1: benchmark smoke (import + run sanity) =="
 python -m benchmarks.bench_sampler_cost --smoke
 python -m benchmarks.bench_round_engine --smoke
 python -m benchmarks.bench_engine_sharded --smoke
+python -m benchmarks.bench_async_planner --smoke
 
 echo "tier-1 OK"

@@ -19,7 +19,26 @@ def build_plan_algorithm1(population: ClientPopulation, m: int) -> SamplingPlan:
 
 
 class Algorithm1Sampler(ClusteredSampler):
-    """Sample-size clustered sampling; the plan is static across rounds."""
+    """Sample-size clustered sampling; the plan is static across rounds.
+
+    The plan still runs through the shared
+    :class:`repro.fl.planner.PlanService` (always version 0, lag 0 — it
+    never observes updates), so plan handoff, telemetry and re-planning
+    machinery are uniform across the clustered samplers.
+    """
 
     def __init__(self, population: ClientPopulation, m: int, *, seed: int = 0):
-        super().__init__(population, build_plan_algorithm1(population, m), seed=seed)
+        from repro.fl.planner import PlanService
+
+        self._service = PlanService(lambda _: build_plan_algorithm1(population, m))
+        super().__init__(population, self._service.current().plan, seed=seed)
+
+    @property
+    def plan_service(self):
+        return self._service
+
+    def plan_telemetry(self) -> tuple[int, int]:
+        return self._service.telemetry()
+
+    def close(self) -> None:
+        self._service.close()

@@ -12,6 +12,13 @@ they cluster together and get promoted jointly (the paper's cold-start
 rule). Clients with ``p_i >= 1/m`` receive ``floor(m p_i)`` dedicated
 probability-1 distributions, their remainder mass joining the common pool
 (final remark of Section 5).
+
+The sampler is the *consumer* half of a producer/consumer split: gradients
+live in a device-resident :class:`repro.fl.gradient_store.GradientStore`
+(scatter-updated from the engine's round output, no host round-trip) and
+plan rebuilds run through a :class:`repro.fl.planner.PlanService` —
+synchronous by default, or overlapped with client local work via
+``planner="async"`` (the paper's Section-5 overlap made explicit).
 """
 from __future__ import annotations
 
@@ -48,12 +55,18 @@ def _resolve_distance_fn(distance_fn: Union[DistanceFn, str, None]) -> Optional[
 def build_plan_algorithm2(
     population: ClientPopulation,
     m: int,
-    G: np.ndarray,
+    G,
     *,
     measure: str = "arccos",
     distance_fn: Optional[DistanceFn] = None,
 ) -> SamplingPlan:
-    """Build the similarity-clustered ``r`` matrix for one round."""
+    """Build the similarity-clustered ``r`` matrix for one round.
+
+    ``G`` is passed to the distance backend untouched — a device array stays
+    on device for the O(n²d) stage (only the (n, n) distance matrix comes
+    back to host for Ward); each backend picks its own dtype (f64 only for
+    the numpy reference, f32 on device).
+    """
     n = population.n_clients
     M = population.total_samples
     mass = m * population.n_samples  # m * n_i tokens per client
@@ -66,17 +79,15 @@ def build_plan_algorithm2(
         raise ValueError("impossible: sum floor(m p_i) > m")
 
     tokens = np.zeros((m, n), dtype=np.int64)
-    urn = 0
-    for i in range(n):
-        for _ in range(int(full_urns[i])):
-            tokens[urn, i] = M
-            urn += 1
+    owners = np.repeat(np.arange(n), full_urns)  # urn k -> its dedicated client
+    tokens[np.arange(owners.size), owners] = M
+    urn = int(owners.size)
 
     cluster_of = np.full(n, -1, dtype=np.int64)
     if m_pool > 0:
         pool = np.flatnonzero(pool_mass > 0)
         dfn = distance_fn or pairwise_distances
-        dist = dfn(np.asarray(G, dtype=np.float64)[pool], measure)
+        dist = np.asarray(dfn(G[pool], measure))
         link = ward_linkage(dist)
         groups_local = cut_tree(link, len(pool), m_pool, pool_mass[pool], M)
         groups = [pool[g] for g in groups_local]
@@ -91,11 +102,17 @@ def build_plan_algorithm2(
 class Algorithm2Sampler(ClusteredSampler):
     """Similarity-based clustered sampling with online re-clustering.
 
-    The sampler stores the latest representative gradient of every client
-    (zeros until first sampled) and rebuilds the plan whenever updates are
-    observed — matching the paper's per-round re-clustering, which the
-    server overlaps with client local work.
+    The latest representative gradient of every client (zeros until first
+    sampled) lives in a device-resident gradient store; observing a round's
+    updates scatters them in and hands a snapshot to the plan service, which
+    rebuilds the plan — inline (``planner="sync"``) or on a background
+    worker overlapping the next round (``planner="async"``), matching the
+    paper's server that overlaps re-clustering with client local work. The
+    freshest completed plan is swapped in at each round boundary (in
+    :meth:`sample`).
     """
+
+    consumes_updates = True
 
     def __init__(
         self,
@@ -107,6 +124,7 @@ class Algorithm2Sampler(ClusteredSampler):
         seed: int = 0,
         distance_fn: Union[DistanceFn, str, None] = "auto",
         staleness_decay: float = 1.0,
+        planner: str = "sync",
     ):
         """``staleness_decay`` < 1 is a beyond-paper extension: every round,
         stored representative gradients shrink by this factor, so clients
@@ -118,41 +136,78 @@ class Algorithm2Sampler(ClusteredSampler):
         backend name (``"auto"`` — the default device path: compiled Pallas
         on TPU, interpret-mode Pallas everywhere else, GPU included — the
         kernel's VMEM scratch is TPU-only; ``"pallas"`` — TPU only, errors
-        elsewhere; ``"pallas-interpret"``; ``"numpy"``), a custom callable,
-        or ``None`` for the numpy host reference."""
+        elsewhere; ``"pallas-interpret"``; ``"streamed"`` — d-chunked
+        accumulation for model-sized gradients; ``"numpy"``), a custom
+        callable, or ``None`` for the numpy host reference.
+
+        ``planner`` selects when Algorithm 2's O(n²d + n³) rebuild runs:
+        ``"sync"`` inside ``observe_updates`` (the parity reference) or
+        ``"async"`` on a background worker while the next round trains."""
+        from repro.fl.gradient_store import GradientStore
+        from repro.fl.planner import PlanService
+
         self.measure = measure
         self.update_dim = int(update_dim)
         self._distance_fn = _resolve_distance_fn(distance_fn)
         self.staleness_decay = float(staleness_decay)
-        self._G = np.zeros((population.n_clients, update_dim), dtype=np.float64)
-        plan = build_plan_algorithm2(
-            population, m, self._G, measure=measure, distance_fn=self._distance_fn
+        self._store = GradientStore(
+            population.n_clients, update_dim, staleness_decay=staleness_decay
         )
-        super().__init__(population, plan, seed=seed)
+
+        def build(G) -> SamplingPlan:
+            return build_plan_algorithm2(
+                population, m, G, measure=measure, distance_fn=self._distance_fn
+            )
+
+        self._service = PlanService(
+            build, mode=planner, initial_input=self._store.snapshot()
+        )
+        super().__init__(population, self._service.current().plan, seed=seed)
 
     @property
     def representative_gradients(self) -> np.ndarray:
-        return self._G
+        return self._store.asnumpy()
 
-    def observe_updates(self, client_ids: np.ndarray, updates: np.ndarray) -> None:
-        updates = np.asarray(updates, dtype=np.float64)
-        if updates.shape != (len(client_ids), self.update_dim):
+    @property
+    def plan_service(self):
+        return self._service
+
+    def _swap_freshest(self) -> None:
+        vp = self._service.poll()
+        if vp is not None:
+            self.set_plan(vp.plan)
+
+    def observe_updates(self, client_ids, updates) -> None:
+        """Scatter the round's updates into the store and trigger a rebuild.
+
+        ``updates`` may be the engine's device array — it is neither copied
+        to host nor cast; the store scatters it on device and the plan
+        service receives an immutable snapshot of G.
+        """
+        if tuple(updates.shape) != (len(client_ids), self.update_dim):
             raise ValueError(
-                f"updates shape {updates.shape} != ({len(client_ids)}, {self.update_dim})"
+                f"updates shape {tuple(updates.shape)} != ({len(client_ids)}, {self.update_dim})"
             )
-        if self.staleness_decay < 1.0:
-            self._G *= self.staleness_decay  # beyond-paper: age-out stale gradients
-        self._G[np.asarray(client_ids, dtype=np.int64)] = updates
-        self.set_plan(
-            build_plan_algorithm2(
-                self.population,
-                self.m,
-                self._G,
-                measure=self.measure,
-                distance_fn=self._distance_fn,
-            )
-        )
+        self._store.update(client_ids, updates)
+        self._service.observe(self._store.snapshot())
+        if self._service.mode == "sync":
+            self._swap_freshest()
+
+    def plan_telemetry(self) -> tuple[int, int]:
+        return self._service.telemetry()
+
+    def flush_plan(self) -> None:
+        """Block until any in-flight rebuild lands, then swap it in.
+
+        Forces the async planner to the sync fixed point — after this, the
+        plan equals what ``planner="sync"`` would hold (fp32 tolerance)."""
+        self._service.flush()
+        self._swap_freshest()
+
+    def close(self) -> None:
+        self._service.close()
 
     def sample(self, round_idx: int) -> SampleResult:
         del round_idx
+        self._swap_freshest()  # round boundary: adopt the freshest plan
         return self._draw_from_plan(self._plan)

@@ -20,6 +20,9 @@ class ClientSampler(abc.ABC):
 
     #: whether the scheme satisfies Assumption 4 (unbiased aggregation)
     unbiased: bool = True
+    #: whether ``observe_updates`` feeds a re-clustering pipeline (so the
+    #: server / driver should bother producing representative gradients)
+    consumes_updates: bool = False
 
     def __init__(self, population: ClientPopulation, m: int, *, seed: int = 0):
         if m <= 0:
@@ -45,6 +48,19 @@ class ClientSampler(abc.ABC):
     def plan(self) -> Optional[SamplingPlan]:
         """Current ``r_{k,i}`` matrix for plan-based samplers, else None."""
         return None
+
+    def plan_telemetry(self) -> tuple[int, int]:
+        """(plan_version, plan_lag_rounds) of the plan the next draw uses.
+
+        Static-plan and plan-free samplers report (0, 0); samplers backed by
+        a :class:`repro.fl.planner.PlanService` report the service's active
+        version and how many observed rounds it trails by (always 0 for the
+        synchronous planner).
+        """
+        return (0, 0)
+
+    def close(self) -> None:
+        """Release background resources (async planner workers)."""
 
     # Shared machinery -------------------------------------------------------
     def _draw_from_plan(self, plan: SamplingPlan) -> SampleResult:

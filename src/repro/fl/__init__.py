@@ -7,6 +7,8 @@ from repro.fl.aggregation import (
     flatten_params,
 )
 from repro.fl.engine import BatchedRoundEngine, batched_round_step
+from repro.fl.gradient_store import GradientStore
+from repro.fl.planner import PlanService, VersionedPlan
 from repro.fl.server import EmptyRoundError, FederatedServer, FLConfig
 from repro.fl.history import History, RoundRecord
 
@@ -23,6 +25,9 @@ __all__ = [
     "flatten_params",
     "BatchedRoundEngine",
     "batched_round_step",
+    "GradientStore",
+    "PlanService",
+    "VersionedPlan",
     "EmptyRoundError",
     "FederatedServer",
     "FLConfig",

@@ -244,6 +244,7 @@ class BatchedRoundEngine:
             fedprox_mu=fedprox_mu,
             mesh=self.mesh,
         )
-        # slice on the host: device slicing with the round-varying c would
-        # trigger a fresh compile per distinct-count
-        return new_params, np.asarray(updates)[:c], np.asarray(losses)[:c]
+        # updates stay a device array: the gradient store scatters them back
+        # into G without a host round-trip (the (m_slots, d) -> (c, d) slice
+        # compiles one tiny gather per distinct-count, c <= m_slots of them)
+        return new_params, updates[:c], np.asarray(losses)[:c]

@@ -1,0 +1,108 @@
+"""Device-resident representative-gradient store for Algorithm 2.
+
+The seed sampler kept ``G`` as a host (n, d) f64 array and required every
+round's ``θ_i^{t+1} − θ^t`` updates to round-trip through the host before
+re-clustering. This store keeps ``G`` as an f32 device buffer and folds the
+per-round feedback in as a *scatter*:
+
+* the batched engine's ``updates_flat`` output is a device array — it goes
+  straight into ``G.at[ids].set(...)`` with no host copy and no f64 cast;
+* staleness decay (the beyond-paper age-out of clients not sampled for many
+  rounds) is a device multiply fused into the same jitted update;
+* padded / invalid slots are handled by the scatter itself: any id >=
+  ``n_clients`` is dropped (``mode="drop"``), so callers can pass a
+  fixed-shape slot block with sentinel ids instead of slicing on host.
+
+jax arrays are immutable, so :meth:`snapshot` is O(1) and yields a
+consistent view even while an async planner worker reads it concurrently
+with the next round's scatter (see ``repro.fl.planner``).
+
+jax is imported lazily; ``backend="numpy"`` (or jax being absent) selects a
+host f32 fallback with identical semantics, keeping ``repro.core`` samplers
+constructible in jax-free environments.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def _jnp():
+    try:
+        import jax  # noqa: F401
+        import jax.numpy as jnp
+    except ImportError:
+        return None
+    return jnp
+
+
+class GradientStore:
+    """(n_clients, d) f32 buffer of latest representative gradients.
+
+    ``update`` implements exactly the seed sampler's semantics: decay the
+    whole buffer by ``staleness_decay`` (1.0 = paper behaviour, a no-op),
+    then overwrite the observed clients' rows.
+    """
+
+    def __init__(
+        self,
+        n_clients: int,
+        update_dim: int,
+        *,
+        staleness_decay: float = 1.0,
+        backend: str = "auto",
+    ):
+        if backend not in ("auto", "jax", "numpy"):
+            raise ValueError(f"unknown gradient-store backend {backend!r}")
+        self.n_clients = int(n_clients)
+        self.update_dim = int(update_dim)
+        self.staleness_decay = float(staleness_decay)
+        jnp = _jnp() if backend in ("auto", "jax") else None
+        if backend == "jax" and jnp is None:
+            raise RuntimeError("gradient-store backend 'jax' requires jax")
+        self._jnp = jnp
+        if jnp is not None:
+            import jax
+
+            def scatter(G, ids, vals):
+                if self.staleness_decay < 1.0:
+                    G = G * np.float32(self.staleness_decay)
+                return G.at[ids].set(vals.astype(jnp.float32), mode="drop")
+
+            self._scatter = jax.jit(scatter)
+            self._G = jnp.zeros((self.n_clients, self.update_dim), jnp.float32)
+        else:
+            self._scatter = None
+            self._G = np.zeros((self.n_clients, self.update_dim), np.float32)
+
+    def update(self, client_ids, updates) -> None:
+        """Scatter ``updates`` (c, d) into rows ``client_ids`` (c,).
+
+        ``updates`` may be a device array (the engine's round output) or
+        numpy; ids at or beyond ``n_clients`` are dropped, which is how
+        fixed-shape padded slot blocks mark unused rows.
+        """
+        if tuple(updates.shape)[1:] != (self.update_dim,):
+            raise ValueError(
+                f"updates shape {tuple(updates.shape)} != (len(ids), {self.update_dim})"
+            )
+        if len(client_ids) != updates.shape[0]:
+            raise ValueError(
+                f"{len(client_ids)} ids for {updates.shape[0]} update rows"
+            )
+        if self._jnp is not None:
+            ids = self._jnp.asarray(np.asarray(client_ids, np.int32))
+            self._G = self._scatter(self._G, ids, self._jnp.asarray(updates))
+        else:
+            ids = np.asarray(client_ids, np.int64)
+            keep = ids < self.n_clients
+            if self.staleness_decay < 1.0:
+                self._G = self._G * np.float32(self.staleness_decay)
+            self._G[ids[keep]] = np.asarray(updates, np.float32)[keep]
+
+    def snapshot(self):
+        """The current G — an immutable device array (or a numpy copy)."""
+        return self._G if self._jnp is not None else self._G.copy()
+
+    def asnumpy(self) -> np.ndarray:
+        """Host f32 copy, for inspection and host-side reference builds."""
+        return np.asarray(self._G)

@@ -15,6 +15,11 @@ class RoundRecord:
     n_distinct_clients: int
     n_distinct_classes: int
     agg_weights: np.ndarray | None = None
+    # planner telemetry: version of the sampling plan this round drew from,
+    # and how many observed rounds it trailed by (0 under the sync planner;
+    # >= 0 when re-clustering overlaps client local work, see fl.planner)
+    plan_version: int = 0
+    plan_lag_rounds: int = 0
 
 
 @dataclasses.dataclass

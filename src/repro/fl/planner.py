@@ -1,0 +1,182 @@
+"""Asynchronous re-clustering planner: plan *building* off the critical path.
+
+The paper's server "overlaps re-clustering with client local work"
+(Section 5): while the sampled clients run their N local steps for round
+``t+1``, the server rebuilds the Algorithm 2 plan from round ``t``'s
+representative gradients. The seed implementation rebuilt synchronously
+inside ``observe_updates`` — O(n²d) distances + O(n³) Ward on the round's
+critical path.
+
+This module is the producer side of the split:
+
+* :class:`PlanService` owns versioned :class:`SamplingPlan`\\ s and accepts
+  *observations* (snapshots of the gradient store) that trigger rebuilds.
+* ``mode="sync"`` rebuilds inline — today's numerics, kept as the parity
+  reference.
+* ``mode="async"`` hands the snapshot to a single background worker and
+  returns immediately; the consumer (the sampler) swaps in the freshest
+  *completed* plan at each round boundary via :meth:`poll`. Pending
+  snapshots are latest-wins: a rebuild that has not started yet is replaced
+  by a newer observation, so the worker never queues up stale work.
+
+A plan's ``version`` is the index of the observation it incorporates
+(0 = the cold-start plan built before any updates). The *lag* reported by
+:meth:`telemetry` is ``observations seen − version of the active plan`` —
+0 in sync mode by construction, ≥ 0 under async overlap; it lands in
+``RoundRecord.plan_lag_rounds`` since the server observes once per round.
+
+The module is dependency-light (stdlib + ``repro.core.types`` only): the
+snapshot is opaque to the service — device arrays pass straight through to
+``build_fn`` without a host round-trip. jax arrays are immutable, so a
+snapshot read by the worker while the engine scatters new updates into the
+store is consistent for free.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Callable, Optional
+
+from repro.core.types import SamplingPlan
+
+BuildFn = Callable[[Any], SamplingPlan]
+
+
+@dataclasses.dataclass(frozen=True)
+class VersionedPlan:
+    """A sampling plan stamped with the observation index it incorporates."""
+
+    plan: SamplingPlan
+    version: int  # number of observations folded in; 0 = cold-start plan
+
+
+class PlanService:
+    """Versioned plan producer, synchronous or overlapped.
+
+    ``build_fn(snapshot) -> SamplingPlan`` is the (expensive) Algorithm 1/2
+    plan constructor; ``initial_input`` is the snapshot for the version-0
+    cold-start plan, built inline at construction either way.
+    """
+
+    MODES = ("sync", "async")
+
+    def __init__(self, build_fn: BuildFn, *, mode: str = "sync", initial_input: Any = None):
+        if mode not in self.MODES:
+            raise ValueError(f"unknown planner mode {mode!r}; choose from {self.MODES}")
+        self.mode = mode
+        self._build_fn = build_fn
+        self._cond = threading.Condition()
+        self._current = VersionedPlan(build_fn(initial_input), version=0)
+        self._completed: Optional[VersionedPlan] = None  # built, not yet polled
+        self._pending: Optional[tuple[int, Any]] = None  # latest-wins snapshot
+        self._building = False
+        self._closed = False
+        self._error: Optional[BaseException] = None
+        self._obs_seen = 0
+        self._worker: Optional[threading.Thread] = None
+
+    # -- producer side ------------------------------------------------------
+    def observe(self, snapshot: Any) -> None:
+        """Record one observation and (re)build the plan from ``snapshot``.
+
+        Sync: builds inline; :meth:`poll` returns the fresh plan immediately
+        after. Async: enqueues (replacing any not-yet-started snapshot) and
+        returns without blocking — the round for ``t+1`` proceeds while the
+        worker rebuilds.
+        """
+        self._raise_pending_error()
+        self._obs_seen += 1
+        if self.mode == "sync":
+            plan = self._build_fn(snapshot)
+            with self._cond:
+                self._completed = VersionedPlan(plan, self._obs_seen)
+            return
+        with self._cond:
+            if self._closed:
+                raise RuntimeError("PlanService is closed")
+            self._pending = (self._obs_seen, snapshot)
+            if self._worker is None:
+                self._worker = threading.Thread(
+                    target=self._worker_loop, name="plan-service", daemon=True
+                )
+                self._worker.start()
+            self._cond.notify_all()
+
+    def _worker_loop(self) -> None:
+        while True:
+            with self._cond:
+                while self._pending is None and not self._closed:
+                    self._cond.wait()
+                if self._closed and self._pending is None:
+                    return
+                version, snapshot = self._pending
+                self._pending = None
+                self._building = True
+            try:
+                plan = self._build_fn(snapshot)
+            except BaseException as e:  # surfaced on the next observe/poll/flush
+                with self._cond:
+                    self._error = e
+                    self._building = False
+                    self._cond.notify_all()
+                continue  # keep servicing newer snapshots (latest-wins)
+            with self._cond:
+                # one worker + latest-wins pending => versions are monotone
+                self._completed = VersionedPlan(plan, version)
+                self._building = False
+                self._cond.notify_all()
+
+    # -- consumer side ------------------------------------------------------
+    def poll(self) -> Optional[VersionedPlan]:
+        """Take the freshest *completed* plan, or None if nothing new.
+
+        Called at round boundaries: non-blocking, so an async rebuild still
+        in flight simply leaves the previous plan active for one more round.
+        """
+        self._raise_pending_error()
+        with self._cond:
+            vp, self._completed = self._completed, None
+            if vp is not None:
+                self._current = vp
+            return vp
+
+    def current(self) -> VersionedPlan:
+        """The active (last polled-in) versioned plan."""
+        with self._cond:
+            return self._current
+
+    def telemetry(self) -> tuple[int, int]:
+        """(version of active plan, observations not yet reflected in it)."""
+        with self._cond:
+            return self._current.version, self._obs_seen - self._current.version
+
+    def flush(self, timeout: Optional[float] = None) -> None:
+        """Block until no rebuild is pending or in flight.
+
+        ``flush(); poll()`` forces async to the sync fixed point — the
+        determinism tests pin async-forced-complete ≡ sync through this.
+        """
+        with self._cond:
+            ok = self._cond.wait_for(
+                lambda: (self._pending is None and not self._building) or self._error,
+                timeout=timeout,
+            )
+            if not ok:
+                raise TimeoutError("plan rebuild did not complete in time")
+        self._raise_pending_error()
+
+    def close(self, timeout: float = 5.0) -> None:
+        """Stop the worker; pending snapshots are abandoned."""
+        with self._cond:
+            self._closed = True
+            self._pending = None
+            self._cond.notify_all()
+            worker, self._worker = self._worker, None
+        if worker is not None:
+            worker.join(timeout)
+
+    def _raise_pending_error(self) -> None:
+        with self._cond:
+            err, self._error = self._error, None
+        if err is not None:
+            raise RuntimeError("plan rebuild failed in the planner worker") from err

@@ -7,7 +7,11 @@ Faithful to the paper's protocol:
   * aggregation is the realized weighted sum (eq. 3/4);
   * similarity-based samplers get the representative gradients
     ``θ_i^{t+1} - θ^t`` of the sampled clients after the round
-    (Algorithm 2 line 1's input), never raw data.
+    (Algorithm 2 line 1's input), never raw data. With the batched engine
+    those updates are a *device* array feeding the sampler's gradient store
+    by scatter — no per-round host copy; with ``planner="async"`` samplers
+    the plan rebuild they trigger overlaps the next round's local work, and
+    each ``RoundRecord`` carries ``plan_version`` / ``plan_lag_rounds``.
 
 Two execution engines (``FLConfig.engine``):
   * ``"batched"`` (default) — the whole round is one jitted
@@ -147,6 +151,9 @@ class FederatedServer:
     def run_round(self, t: int) -> RoundRecord:
         cfg = self.cfg
         result = self.sampler.sample(t)
+        # sample() is the round boundary where planner-backed samplers swap
+        # in the freshest completed plan — capture what this round drew from
+        plan_version, plan_lag = self.sampler.plan_telemetry()
         distinct = result.unique_clients
         if distinct.size == 0:
             raise EmptyRoundError(
@@ -196,6 +203,8 @@ class FederatedServer:
             n_distinct_clients=len(distinct),
             n_distinct_classes=len(classes),
             agg_weights=result.agg_weights,
+            plan_version=plan_version,
+            plan_lag_rounds=plan_lag,
         )
         self.history.append(rec)
         return rec

@@ -11,6 +11,11 @@ Grid: (n/bi, n/bj, d/bd) with the d-axis innermost; an f32 VMEM scratch
 accumulates across d-blocks and flushes to the output block on the last
 step. Block sizes default to 128 — MXU-aligned (128×128 systolic tiles) and
 a bounded VMEM footprint: 2·(128·128)·4 B inputs + 128·128·4 B acc ≈ 192 KiB.
+
+Both ops are exact sums over the d axis, which is what lets
+``ops.pairwise_distances_streamed`` call this kernel on (n, d_chunk) slabs
+and add the partial outputs — the zero padding below then only ever applies
+to one slab, not the whole model-sized (n, d) block.
 """
 from __future__ import annotations
 

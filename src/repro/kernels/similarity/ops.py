@@ -3,6 +3,15 @@
 Drop-in replacement for ``repro.core.clustering.similarity.pairwise_distances``
 (numpy) — Algorithm 2 passes ``distance_fn=pallas_pairwise_distances`` to run
 the O(n²d) stage on TPU. On CPU builds, set ``interpret=True`` (tests do).
+
+Two entry points:
+
+* :func:`pairwise_distances_device` — one kernel launch over the full
+  (n, d) block, padded to tile multiples. Right for sampler-sized ``d``.
+* :func:`pairwise_distances_streamed` — accumulates the Gram / L1 matrix
+  over ``d``-chunks of G, so for model-sized ``d`` only an (n, d_chunk)
+  slab is ever padded (and, for host inputs, ever device-resident) at once;
+  the (n, n) accumulator is the only full-width array.
 """
 from __future__ import annotations
 
@@ -12,6 +21,14 @@ import numpy as np
 
 from repro.kernels.similarity.kernel import pairwise_kernel
 from repro.kernels.similarity.ref import distances_from_gram
+
+#: d above which the "auto" backend switches to the streamed accumulation.
+STREAM_D_THRESHOLD = 8192
+
+
+def _l1_postprocess(d: jnp.ndarray) -> jnp.ndarray:
+    d = jnp.where(jnp.eye(d.shape[0], dtype=bool), 0.0, d)
+    return jnp.maximum(d, d.T)
 
 
 def pairwise_distances_device(
@@ -29,16 +46,63 @@ def pairwise_distances_device(
         return distances_from_gram(gram, measure)
     if measure == "l1":
         d = pairwise_kernel(G, op="l1", block_n=block_n, block_d=block_d, interpret=interpret)
-        d = jnp.where(jnp.eye(d.shape[0], dtype=bool), 0.0, d)
-        return jnp.maximum(d, d.T)
+        return _l1_postprocess(d)
     raise ValueError(f"unknown measure {measure!r}")
 
 
-def make_distance_fn(*, interpret: bool = False):
-    """Adapter matching ``repro.core.samplers.algorithm2.DistanceFn``."""
+def pairwise_distances_streamed(
+    G,
+    measure: str = "arccos",
+    *,
+    block_n: int = 128,
+    block_d: int = 128,
+    d_chunk: int = STREAM_D_THRESHOLD,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """(n, d) -> (n, n) distances, accumulated over ``d``-chunks of G.
 
-    def fn(G: np.ndarray, measure: str) -> np.ndarray:
-        return np.asarray(pairwise_distances_device(G, measure, interpret=interpret))
+    Both the Gram matrix and the L1 distance are sums over coordinates, so
+    per-chunk kernel outputs add exactly. The kernel pads each (n, chunk)
+    slab independently — the padded (n, d) block of the one-shot path is
+    never materialized. Host (numpy) G is additionally *transferred* one
+    chunk at a time, so the device never holds the full model-sized block.
+    Matches :func:`pairwise_distances_device` to fp32 accumulation-order
+    tolerance.
+    """
+    if measure not in ("arccos", "l2", "l1"):
+        raise ValueError(f"unknown measure {measure!r}")
+    n, d = G.shape
+    if d == 0:
+        raise ValueError("need at least one gradient coordinate")
+    d_chunk = max(int(d_chunk), 1)
+    op = "l1" if measure == "l1" else "gram"
+    acc = jnp.zeros((n, n), jnp.float32)
+    for lo in range(0, d, d_chunk):
+        chunk = jnp.asarray(G[:, lo : lo + d_chunk], jnp.float32)
+        acc = acc + pairwise_kernel(
+            chunk, op=op, block_n=block_n, block_d=block_d, interpret=interpret
+        )
+    if op == "gram":
+        return distances_from_gram(acc, measure)
+    return _l1_postprocess(acc)
+
+
+def make_distance_fn(*, interpret: bool = False, streamed: bool = False, d_chunk: int = STREAM_D_THRESHOLD):
+    """Adapter matching ``repro.core.samplers.algorithm2.DistanceFn``.
+
+    ``streamed=True`` always streams; otherwise the one-shot kernel is used
+    up to ``d_chunk`` coordinates and streaming kicks in beyond it, so
+    model-sized ``d`` never pays the padded full-width copy.
+    """
+
+    def fn(G, measure: str) -> np.ndarray:
+        if streamed or G.shape[1] > d_chunk:
+            out = pairwise_distances_streamed(
+                G, measure, d_chunk=d_chunk, interpret=interpret
+            )
+        else:
+            out = pairwise_distances_device(G, measure, interpret=interpret)
+        return np.asarray(out)
 
     return fn
 
@@ -49,9 +113,12 @@ def resolve_distance_backend(backend: str = "auto"):
     * ``"auto"``     — compiled Pallas kernel on TPU, interpret-mode Pallas
       everywhere else — including GPU (same code path, jax-ops execution;
       the kernel's ``pltpu.VMEM`` scratch / mosaic block specs are
-      TPU-only, so there is no compiled GPU path).
+      TPU-only, so there is no compiled GPU path). Streams automatically
+      once ``d`` exceeds :data:`STREAM_D_THRESHOLD`.
     * ``"pallas"``   — compiled Pallas kernel; TPU only, errors elsewhere.
     * ``"pallas-interpret"`` — interpret-mode Pallas anywhere (tests).
+    * ``"streamed"`` — always the chunked accumulation (compiled on TPU,
+      interpret elsewhere); for model-sized ``d``.
     * ``"numpy"``    — the f64 host reference
       (:func:`repro.core.clustering.similarity.pairwise_distances`).
     """
@@ -63,6 +130,12 @@ def resolve_distance_backend(backend: str = "auto"):
         import jax
 
         return make_distance_fn(interpret=jax.default_backend() != "tpu")
+    if backend == "streamed":
+        import jax
+
+        return make_distance_fn(
+            interpret=jax.default_backend() != "tpu", streamed=True
+        )
     if backend == "pallas":
         import jax
 
@@ -78,5 +151,5 @@ def resolve_distance_backend(backend: str = "auto"):
         return make_distance_fn(interpret=True)
     raise ValueError(
         f"unknown distance backend {backend!r}; "
-        "choose from auto | pallas | pallas-interpret | numpy"
+        "choose from auto | pallas | pallas-interpret | streamed | numpy"
     )

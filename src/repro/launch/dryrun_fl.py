@@ -41,9 +41,12 @@ def run_fl_round(
     global_batch: int = 256,
     out_dir: str = "experiments/dryrun",
     variants: list[str] | None = None,
+    planner: str = "none",
 ):
     from repro.launch.dryrun import apply_variants  # shares variant plumbing
 
+    if planner not in ("none", "sync", "async"):
+        raise ValueError(f"unknown planner {planner!r}; choose none | sync | async")
     t0 = time.time()
     cfg = apply_variants(get_config(arch), variants or [])
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -51,7 +54,13 @@ def run_fl_round(
     m = data_parallel_degree(mesh)  # one client per data group
     local_batch = global_batch // m
 
-    step_fn = make_fl_round_step(cfg, lr=1e-2, n_local_steps=n_local)
+    # with a planner, the round also emits the (m, d) flat representative
+    # gradients that feed Algorithm 2's device-resident store — lower that
+    # variant so its extra output (and shardings) are part of the analysis
+    with_updates = planner != "none"
+    step_fn = make_fl_round_step(
+        cfg, lr=1e-2, n_local_steps=n_local, with_updates=with_updates
+    )
     specs = fl_input_specs(cfg, m, n_local, local_batch, seq_len)
 
     # cross-silo layout: params replicated over the client/data axes
@@ -71,16 +80,26 @@ def run_fl_round(
     # propagation only; the quantity under study — the *client-axis*
     # collective schedule (per-round weighted combine vs per-step gradient
     # all-reduce) — is unaffected.
+    from repro.launch.mesh import leading_batch_spec
+
+    d_model_flat = sum(
+        int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(abstract_params(cfg))
+    )
+    # planner feed: flat updates sharded over the client axis like the batch
+    upd_sh = NamedSharding(mesh, leading_batch_spec(mesh, 2))
+    out_sh = (p_repl, loss_sh, upd_sh) if with_updates else (p_repl, loss_sh)
     with mesh:
         jitted = jax.jit(
             lambda p, b: step_fn(p, b["client_tokens"], b["client_targets"], b["weights"]),
             in_shardings=(p_repl, batch_sh),
-            out_shardings=(p_repl, loss_sh),
+            out_shardings=out_sh,
         )
         compiled = jitted.lower(abstract_params(cfg), specs).compile()
 
+    from repro.launch.dryrun import normalize_cost_analysis
+
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = normalize_cost_analysis(compiled.cost_analysis())
     colls = rl.parse_collectives(compiled.as_text())
     # NOTE: the model body runs under vmap+scan(local steps) — while-loop
     # body counted once, so per-LOCAL-STEP cost ≈ reported cost directly;
@@ -104,11 +123,17 @@ def run_fl_round(
             (mem.argument_size_in_bytes + mem.temp_size_in_bytes + mem.output_size_in_bytes)
             / 2**30, 3,
         ),
+        # async keeps the rebuild off the round's critical path entirely; the
+        # device-side cost of feeding it is the (m, d) f32 updates output
+        "planner": planner,
+        "planner_feed_bytes": (m * d_model_flat * 4) if with_updates else 0,
         "variants": variants or [],
         "compile_s": round(time.time() - t0, 1),
     }
     os.makedirs(out_dir, exist_ok=True)
     tag = "+".join(variants or []) or "baseline"
+    if planner != "none":
+        tag += f"+planner-{planner}"
     with open(
         os.path.join(out_dir, f"{arch}__fl_round_N{n_local}__{rec['mesh']}__{tag}.json"), "w"
     ) as f:
@@ -128,10 +153,16 @@ def main() -> None:
     ap.add_argument("--arch", choices=ARCH_NAMES, default="qwen3-0.6b")
     ap.add_argument("--local-steps", type=int, default=8)
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument(
+        "--planner", choices=("none", "sync", "async"), default="none",
+        help="lower the planner-fed round variant (emits the (m, d) flat "
+        "representative gradients Algorithm 2's gradient store consumes)",
+    )
     ap.add_argument("--out", default="experiments/dryrun")
     args = ap.parse_args()
     run_fl_round(
-        args.arch, n_local=args.local_steps, multi_pod=args.multi_pod, out_dir=args.out
+        args.arch, n_local=args.local_steps, multi_pod=args.multi_pod,
+        out_dir=args.out, planner=args.planner,
     )
 
 

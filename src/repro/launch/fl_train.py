@@ -16,6 +16,12 @@ all-reduce for a per-round parameter all-reduce: collective bytes drop by
 
 The round step is jit/shard_map-free pure jnp + vmap: GSPMD maps the client
 axis onto ("pod","data"), the model dims onto "model" via the usual rules.
+
+Similarity-based sampling (``FLLMConfig.sampler="algorithm2"``) closes the
+loop: the round step also emits the flattened per-client updates, which feed
+the sampler's device-resident gradient store; ``FLLMConfig.planner="async"``
+rebuilds the Algorithm 2 plan on a background worker while the next round's
+clients train (repro.fl.planner).
 """
 from __future__ import annotations
 
@@ -54,7 +60,11 @@ def make_local_sgd(cfg: ModelConfig, lr: float, n_local_steps: int):
     return local_sgd
 
 
-def make_fl_round_step(cfg: ModelConfig, lr: float, n_local_steps: int):
+def make_fl_round_step(cfg: ModelConfig, lr: float, n_local_steps: int, *, with_updates: bool = False):
+    """``with_updates=True`` additionally returns the flattened per-client
+    representative gradients ``θ_k^{t+1} − θ^t`` (m, d) — Algorithm 2 line
+    1's input, produced inside the same jitted round so the planner's
+    gradient store is fed from device without an extra pass."""
     local_sgd = make_local_sgd(cfg, lr, n_local_steps)
 
     def fl_round_step(params, client_tokens, client_targets, weights):
@@ -70,7 +80,15 @@ def make_fl_round_step(cfg: ModelConfig, lr: float, n_local_steps: int):
             ).astype(stacked.dtype),
             client_params,
         )
-        return new_params, losses.mean()
+        if not with_updates:
+            return new_params, losses.mean()
+        from repro.fl.aggregation import flatten_params
+
+        flat_global = flatten_params(params).astype(jnp.float32)
+        updates = jax.vmap(
+            lambda cp: flatten_params(cp).astype(jnp.float32) - flat_global
+        )(client_params)
+        return new_params, losses.mean(), updates
 
     return fl_round_step
 
@@ -114,6 +132,32 @@ class FLLMConfig:
     lr: float = 0.05
     sampler: str = "algorithm1"
     seed: int = 0
+    # Plan-rebuild scheduling for similarity-based samplers: "sync" rebuilds
+    # on the critical path, "async" overlaps Algorithm 2's re-clustering
+    # with the next round's local work (repro.fl.planner).
+    planner: str = "sync"
+
+
+def make_lm_sampler(fl: FLLMConfig, population, update_dim: int) -> ClientSampler:
+    """Build the sampler named by ``fl.sampler`` for the LM driver.
+
+    ``update_dim`` is the flattened model size — Algorithm 2's gradient
+    store holds (n_clients, update_dim) f32 on device, and its plan service
+    runs in ``fl.planner`` mode.
+    """
+    from repro.core import Algorithm1Sampler, Algorithm2Sampler, MDSampler
+
+    if fl.sampler == "md":
+        return MDSampler(population, fl.m, seed=fl.seed)
+    if fl.sampler == "algorithm1":
+        return Algorithm1Sampler(population, fl.m, seed=fl.seed)
+    if fl.sampler == "algorithm2":
+        return Algorithm2Sampler(
+            population, fl.m, update_dim, seed=fl.seed, planner=fl.planner
+        )
+    raise ValueError(
+        f"unknown fl sampler {fl.sampler!r}; choose from md | algorithm1 | algorithm2"
+    )
 
 
 def run_federated_lm(
@@ -139,7 +183,11 @@ def run_federated_lm(
         for c in range(fl.n_clients)
     ]
     params = mdl.init_params(cfg, jax.random.PRNGKey(fl.seed))
-    step_fn = make_fl_round_step(cfg, fl.lr, fl.n_local_steps)
+    # similarity-based samplers need the per-client representative gradients
+    # back — the round step then also emits the (m, d) flat updates, which
+    # feed the sampler's device-resident gradient store / plan service
+    feedback = getattr(sampler, "consumes_updates", False)
+    step_fn = make_fl_round_step(cfg, fl.lr, fl.n_local_steps, with_updates=feedback)
     if mesh is None:
         round_step = jax.jit(step_fn)
     else:
@@ -180,8 +228,16 @@ def run_federated_lm(
         )
         tgts = (toks * 1 + 31) % cfg.vocab_size  # same structure as TokenPipeline
         weights = np.full(len(res.clients), 1.0 / len(res.clients), np.float32)
-        params, loss = round_step(
+        out = round_step(
             params, jnp.asarray(toks), jnp.asarray(tgts), jnp.asarray(weights)
         )
+        if feedback:
+            params, loss, updates = out
+            # a client drawn twice trained twice on different batches here —
+            # keep the first slot's update so the scatter is deterministic
+            ids, first = np.unique(np.asarray(res.clients), return_index=True)
+            sampler.observe_updates(ids.astype(np.int64), updates[first])
+        else:
+            params, loss = out
         losses.append(float(loss))
     return losses

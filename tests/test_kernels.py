@@ -10,7 +10,10 @@ from repro.kernels.aggregate.ref import aggregate_ref
 from repro.kernels.flash_attention.ops import flash_attention_padded
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.similarity.kernel import pairwise_kernel
-from repro.kernels.similarity.ops import pairwise_distances_device
+from repro.kernels.similarity.ops import (
+    pairwise_distances_device,
+    pairwise_distances_streamed,
+)
 from repro.kernels.similarity.ref import gram_ref, l1_ref
 from repro.core.clustering.similarity import pairwise_distances as np_pairwise
 
@@ -65,6 +68,81 @@ def test_pairwise_zero_rows_parity_with_numpy_reference(measure):
         assert dev[0, 3] == 0.0 and dev[3, 7] == 0.0
         np.testing.assert_allclose(dev[0, 1], np.pi / 2, atol=1e-6)
         np.testing.assert_allclose(dev[7, 2], np.pi / 2, atol=1e-6)
+
+
+@pytest.mark.parametrize("measure", ["arccos", "l2", "l1"])
+@pytest.mark.parametrize(
+    "n,d,d_chunk",
+    [
+        (21, 45, 16),   # non-multiple n and d, ragged final chunk
+        (33, 130, 32),  # 5 chunks, none aligned to the block size
+        (16, 64, 64),   # single chunk == one-shot degenerate case
+        (9, 200, 64),   # d >> n, the model-sized-d regime in miniature
+    ],
+)
+def test_streamed_matches_one_shot_and_numpy(measure, n, d, d_chunk):
+    """d-chunked accumulation must pin to the one-shot kernel AND the f64
+    numpy reference across all three measures (Gram and L1 are both exact
+    sums over coordinate chunks)."""
+    G = RNG.normal(size=(n, d)).astype(np.float32)
+    st = np.asarray(
+        pairwise_distances_streamed(
+            G, measure, block_n=8, block_d=16, d_chunk=d_chunk, interpret=True
+        )
+    )
+    one = np.asarray(
+        pairwise_distances_device(G, measure, block_n=8, block_d=16, interpret=True)
+    )
+    np.testing.assert_allclose(st, one, atol=1e-4)
+    np.testing.assert_allclose(st, np_pairwise(G, measure), atol=1e-4)
+    assert (np.diag(st) == 0).all()
+    np.testing.assert_allclose(st, st.T)
+
+
+@pytest.mark.parametrize("measure", ["arccos", "l1"])
+def test_streamed_never_sees_full_width_block(measure, monkeypatch):
+    """The streamed path must hand the kernel (n, <= d_chunk) slabs only —
+    the padded (n, d) block of the one-shot path is never materialized."""
+    from repro.kernels.similarity import ops
+
+    widths = []
+    real = ops.pairwise_kernel
+
+    def spy(G, **kw):
+        widths.append(int(G.shape[1]))
+        return real(G, **kw)
+
+    monkeypatch.setattr(ops, "pairwise_kernel", spy)
+    G = RNG.normal(size=(12, 100)).astype(np.float32)
+    out = np.asarray(
+        pairwise_distances_streamed(
+            G, measure, block_n=8, block_d=16, d_chunk=32, interpret=True
+        )
+    )
+    assert widths == [32, 32, 32, 4]  # chunked cover of d=100, ragged tail
+    np.testing.assert_allclose(out, np_pairwise(G, measure), atol=1e-4)
+
+
+def test_streamed_zero_rows_conventions():
+    """Cold-start (all-zero) rows keep the arccos conventions under
+    chunked accumulation: zero-vs-zero -> 0, zero-vs-nonzero -> pi/2."""
+    G = RNG.normal(size=(7, 40)).astype(np.float32)
+    G[[1, 4]] = 0.0
+    st = np.asarray(
+        pairwise_distances_streamed(
+            G, "arccos", block_n=8, block_d=16, d_chunk=16, interpret=True
+        )
+    )
+    assert st[1, 4] == 0.0
+    np.testing.assert_allclose(st[1, 0], np.pi / 2, atol=1e-6)
+
+
+def test_streamed_backend_resolves():
+    from repro.kernels.similarity.ops import resolve_distance_backend
+
+    fn = resolve_distance_backend("streamed")
+    G = RNG.normal(size=(10, 30)).astype(np.float32)
+    np.testing.assert_allclose(fn(G, "l2"), np_pairwise(G, "l2"), atol=1e-4)
 
 
 def test_pallas_backend_requires_tpu():

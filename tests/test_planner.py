@@ -1,0 +1,296 @@
+"""Planner subsystem: PlanService semantics, gradient store scatter,
+async-forced-complete ≡ sync determinism, and server plan telemetry."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import Algorithm1Sampler, Algorithm2Sampler, ClientPopulation, validate_plan
+from repro.core.samplers.algorithm2 import build_plan_algorithm2
+from repro.core.types import SamplingPlan
+from repro.fl import FederatedServer, FLConfig, by_class_shards, flatten_params
+from repro.fl.gradient_store import GradientStore
+from repro.fl.planner import PlanService
+from repro.models.simple import init_mlp
+from repro.optim import sgd
+
+POP = ClientPopulation(np.full(30, 100))
+
+
+def _build(G) -> SamplingPlan:
+    return build_plan_algorithm2(POP, 5, np.asarray(G), distance_fn=None)
+
+
+def _zeros():
+    return np.zeros((30, 8))
+
+
+# --------------------------------------------------------------------------
+# PlanService
+# --------------------------------------------------------------------------
+def test_sync_service_rebuilds_inline():
+    svc = PlanService(_build, mode="sync", initial_input=_zeros())
+    assert svc.current().version == 0
+    assert svc.telemetry() == (0, 0)
+    rng = np.random.default_rng(0)
+    for k in range(1, 4):
+        G = _zeros()
+        G[:10] = rng.normal(size=(10, 8))
+        svc.observe(G)
+        vp = svc.poll()
+        assert vp is not None and vp.version == k
+        assert svc.telemetry() == (k, 0)
+    assert svc.poll() is None  # nothing new until the next observation
+
+
+def test_async_service_latest_wins_and_flush():
+    release = threading.Event()
+    built = []
+
+    def slow_build(G):
+        if G is None:  # the inline initial build is not gated
+            return _build(_zeros())
+        release.wait(5.0)
+        built.append(np.asarray(G).sum())
+        return _build(G)
+
+    svc = PlanService(slow_build, mode="async", initial_input=None)
+    for k in range(1, 4):  # three rapid observations, worker gated shut
+        G = _zeros()
+        G[0] = k
+        svc.observe(G)
+    assert svc.poll() is None  # nothing completed yet — previous plan stays
+    assert svc.telemetry()[1] >= 1  # lag visible while the rebuild is pending
+    release.set()
+    svc.flush()
+    vp = svc.poll()
+    assert vp is not None and vp.version == 3  # latest snapshot won
+    # intermediate snapshots were dropped, not queued: at most the one the
+    # worker had already picked up plus the final one were ever built
+    assert len(built) <= 2
+    assert svc.telemetry() == (3, 0)
+    svc.close()
+
+
+def test_async_worker_error_surfaces_and_recovers():
+    calls = []
+
+    def boom(G):
+        if G is None:
+            return _build(_zeros())
+        calls.append(1)
+        if len(calls) == 1:
+            raise RuntimeError("ward exploded")
+        return _build(G)
+
+    svc = PlanService(boom, mode="async", initial_input=None)
+    svc.observe(_zeros())
+    with pytest.raises(RuntimeError, match="plan rebuild failed"):
+        svc.flush()
+        svc.poll()  # whichever of the two sees the error first must raise it
+    # the failure is consumed; the previous plan stays active and the worker
+    # survives to build later snapshots
+    assert svc.current().version == 0
+    svc.observe(_zeros())
+    svc.flush()
+    vp = svc.poll()
+    assert vp is not None and vp.version == 2
+    svc.close()
+
+
+def test_pending_snapshot_survives_worker_error():
+    """A snapshot enqueued while a failing build is in flight must still be
+    built after the error — the worker keeps draining, flush cannot hang."""
+    started, gate = threading.Event(), threading.Event()
+
+    def build(G):
+        if G is None:
+            return _build(_zeros())
+        if np.asarray(G)[0, 0] == 1.0:  # snapshot A: fail, but only after B queued
+            started.set()
+            gate.wait(5.0)
+            raise RuntimeError("A failed")
+        return _build(_zeros())
+
+    svc = PlanService(build, mode="async", initial_input=None)
+    A = _zeros()
+    A[0, 0] = 1.0
+    svc.observe(A)
+    assert started.wait(5.0)  # worker is inside A's build
+    svc.observe(_zeros())  # B becomes pending behind the doomed build
+    gate.set()
+    with pytest.raises(RuntimeError, match="plan rebuild failed"):
+        svc.flush()
+        svc.poll()
+    svc.flush(timeout=5.0)  # B's rebuild still lands — no orphaned snapshot
+    vp = svc.poll()
+    assert vp is not None and vp.version == 2
+    svc.close()
+
+
+def test_unknown_planner_mode_rejected():
+    with pytest.raises(ValueError, match="unknown planner mode"):
+        PlanService(_build, mode="turbo", initial_input=_zeros())
+    with pytest.raises(ValueError, match="unknown planner mode"):
+        Algorithm2Sampler(POP, 5, update_dim=8, planner="turbo")
+
+
+# --------------------------------------------------------------------------
+# GradientStore
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["jax", "numpy"])
+def test_gradient_store_scatter_and_decay(backend):
+    store = GradientStore(6, 4, staleness_decay=0.5, backend=backend)
+    u1 = np.arange(8, dtype=np.float32).reshape(2, 4)
+    store.update(np.array([1, 3]), u1)
+    G = store.asnumpy()
+    np.testing.assert_allclose(G[[1, 3]], u1)
+    np.testing.assert_allclose(G[[0, 2, 4, 5]], 0.0)
+    # second round: survivors decay, observed rows are overwritten
+    store.update(np.array([3]), np.full((1, 4), 7.0, np.float32))
+    G = store.asnumpy()
+    np.testing.assert_allclose(G[1], 0.5 * u1[0])
+    np.testing.assert_allclose(G[3], 7.0)
+
+
+@pytest.mark.parametrize("backend", ["jax", "numpy"])
+def test_gradient_store_drops_out_of_range_slots(backend):
+    """Padded slot blocks mark unused rows with id >= n — dropped, so client
+    0's gradient is never clobbered by padding."""
+    store = GradientStore(4, 3, backend=backend)
+    store.update(np.array([0]), np.ones((1, 3), np.float32))
+    store.update(
+        np.array([2, 4, 4]),  # one real row + two padded sentinels
+        np.stack([np.full(3, 5.0), np.full(3, 9.0), np.full(3, 9.0)]).astype(np.float32),
+    )
+    G = store.asnumpy()
+    np.testing.assert_allclose(G[0], 1.0)
+    np.testing.assert_allclose(G[2], 5.0)
+    assert not np.isin(9.0, G)
+
+
+def test_gradient_store_accepts_device_updates():
+    jnp = pytest.importorskip("jax.numpy")
+    store = GradientStore(5, 4)
+    store.update(np.array([2]), jnp.full((1, 4), 3.0, jnp.float32))
+    np.testing.assert_allclose(store.asnumpy()[2], 3.0)
+    # snapshot is immutable under further updates (async worker safety)
+    snap = store.snapshot()
+    store.update(np.array([2]), jnp.zeros((1, 4), jnp.float32))
+    np.testing.assert_allclose(np.asarray(snap)[2], 3.0)
+
+
+def test_gradient_store_shape_mismatch():
+    store = GradientStore(4, 3)
+    with pytest.raises(ValueError, match="updates shape"):
+        store.update(np.array([0]), np.ones((1, 5), np.float32))
+    with pytest.raises(ValueError, match="ids for"):
+        store.update(np.array([0, 1]), np.ones((1, 3), np.float32))
+
+
+# --------------------------------------------------------------------------
+# async-forced-complete ≡ sync
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("distance_fn", ["numpy", "pallas-interpret"])
+def test_async_forced_complete_matches_sync_plans(distance_fn):
+    """Flushing the async worker after every observation must reproduce the
+    sync planner's plans (identical f32 store, identical backend)."""
+    kw = dict(update_dim=8, seed=0, distance_fn=distance_fn)
+    s_sync = Algorithm2Sampler(POP, 5, planner="sync", **kw)
+    s_async = Algorithm2Sampler(POP, 5, planner="async", **kw)
+    rng = np.random.default_rng(2)
+    for _ in range(4):
+        ids = rng.choice(POP.n_clients, size=6, replace=False)
+        upd = rng.normal(size=(6, 8))
+        s_sync.observe_updates(ids, upd)
+        s_async.observe_updates(ids, upd)
+        s_async.flush_plan()
+        np.testing.assert_allclose(s_async.plan.r, s_sync.plan.r, atol=1e-6)
+        assert s_async.plan_telemetry() == s_sync.plan_telemetry()
+        validate_plan(s_async.plan, POP)
+    s_async.close()
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    return by_class_shards(dim=16, noise=0.8, train_per_client=60, test_per_client=10, seed=0)
+
+
+class _ForcedAsyncSampler(Algorithm2Sampler):
+    """Async planner with every rebuild forced to land before the next draw."""
+
+    def observe_updates(self, client_ids, updates):
+        super().observe_updates(client_ids, updates)
+        self.flush_plan()
+
+
+def _run_server(dataset, sampler, rounds=5):
+    params = init_mlp((16, 32, 10), seed=1)
+    cfg = FLConfig(n_rounds=rounds, n_local_steps=8, batch_size=32, seed=0)
+    srv = FederatedServer(dataset, sampler, params, sgd(0.08), cfg)
+    srv.run()
+    return srv
+
+
+def test_async_forced_complete_matches_sync_training(dataset):
+    """End-to-end: async-forced-complete ≡ sync to fp32 tolerance — same
+    plans ⇒ same draws ⇒ same realized rounds ⇒ same final model."""
+    pop = dataset.population
+    params = init_mlp((16, 32, 10), seed=1)
+    d = int(flatten_params(params).shape[0])
+    a = _run_server(dataset, Algorithm2Sampler(pop, 10, update_dim=d, seed=0, planner="sync"))
+    b = _run_server(dataset, _ForcedAsyncSampler(pop, 10, update_dim=d, seed=0, planner="async"))
+    np.testing.assert_allclose(
+        np.asarray(flatten_params(a.params)),
+        np.asarray(flatten_params(b.params)),
+        rtol=1e-4, atol=1e-5,
+    )
+    np.testing.assert_allclose(
+        a.history.series("train_loss"), b.history.series("train_loss"),
+        rtol=1e-4, atol=1e-6,
+    )
+    # forced-complete async is never stale
+    assert (b.history.series("plan_lag_rounds") == 0).all()
+    b.sampler.close()
+
+
+# --------------------------------------------------------------------------
+# server telemetry + free-running async
+# --------------------------------------------------------------------------
+def test_server_records_plan_telemetry_sync(dataset):
+    pop = dataset.population
+    params = init_mlp((16, 32, 10), seed=1)
+    d = int(flatten_params(params).shape[0])
+    srv = _run_server(dataset, Algorithm2Sampler(pop, 10, update_dim=d, seed=0), rounds=4)
+    assert (srv.history.series("plan_lag_rounds") == 0).all()
+    # round t draws from the plan rebuilt after round t-1's observation
+    np.testing.assert_array_equal(srv.history.series("plan_version"), np.arange(4))
+
+
+def test_server_records_plan_telemetry_static_sampler(dataset):
+    s = Algorithm1Sampler(dataset.population, 10, seed=0)
+    # Algorithm 1 runs through the same PlanService contract as Algorithm 2:
+    # its static plan is the service's version-0 cold-start plan
+    assert s.plan_service.current().plan is s.plan
+    assert s.plan_service.mode == "sync"
+    srv = _run_server(dataset, s, rounds=2)
+    assert (srv.history.series("plan_version") == 0).all()
+    assert (srv.history.series("plan_lag_rounds") == 0).all()
+    s.close()
+
+
+def test_free_running_async_server_stays_valid(dataset):
+    """Un-forced async: every adopted plan is Proposition-1 valid, versions
+    are monotone, and lag stays within the observed horizon."""
+    pop = dataset.population
+    params = init_mlp((16, 32, 10), seed=1)
+    d = int(flatten_params(params).shape[0])
+    s = Algorithm2Sampler(pop, 10, update_dim=d, seed=0, planner="async")
+    srv = _run_server(dataset, s, rounds=6)
+    validate_plan(s.plan, pop)
+    vers = srv.history.series("plan_version")
+    lags = srv.history.series("plan_lag_rounds")
+    assert (np.diff(vers) >= 0).all()
+    assert (lags >= 0).all() and (vers + lags == np.arange(6)).all()
+    assert np.isfinite(srv.history.series("train_loss")).all()
+    s.close()
