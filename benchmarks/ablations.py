@@ -1,29 +1,38 @@
 """Appendix D ablations: similarity measure (D.2), local work N and number of
-sampled clients m (D.4), FedProx regularization (D.5)."""
+sampled clients m (D.4), FedProx regularization (D.5).
+
+Each ablation axis is a spec matrix (repro.fl.experiment): the varied knob
+lands in the sampler options or the train section, nothing is hand-wired.
+"""
 from __future__ import annotations
 
 import time
 
-from benchmarks.common import emit, run_fl
-from repro.core import Algorithm2Sampler, MDSampler
-from repro.fl import dirichlet_labels
-from repro.fl.aggregation import flatten_params
-from repro.models.simple import init_mlp
+from benchmarks.common import PAPER_TRAIN, emit, run_spec
+from repro.fl.experiment import DataSpec, build_dataset
 
 DIM = 32
 ROUNDS = 12
 
+DATA = {"name": "dirichlet_labels", "options": {"alpha": 0.01, "dim": DIM, "noise": 2.5, "seed": 0}}
+
+
+def _spec(sampler: dict, **train_overrides) -> dict:
+    return {
+        "data": DATA,
+        "sampler": sampler,
+        "train": {"n_rounds": ROUNDS, **PAPER_TRAIN, **train_overrides},
+    }
+
 
 def main() -> None:
-    ds = dirichlet_labels(alpha=0.01, dim=DIM, noise=2.5, seed=0)
-    pop = ds.population
-    d = int(flatten_params(init_mlp((DIM, 50, 10))).shape[0])
+    ds = build_dataset(DataSpec.from_dict(DATA))
 
     # D.2 — similarity measures are equivalent in practice
     for measure in ("arccos", "l2", "l1"):
-        s = Algorithm2Sampler(pop, 10, update_dim=d, measure=measure, seed=0)
+        spec = _spec({"name": "algorithm2", "m": 10, "options": {"measure": measure}})
         t0 = time.perf_counter()
-        r = run_fl(ds, s, rounds=ROUNDS, n_local=10, batch=50, lr=0.05)
+        r = run_spec(spec, dataset=ds)
         emit(
             f"ablation_D2/measure={measure}",
             (time.perf_counter() - t0) * 1e6 / ROUNDS,
@@ -32,21 +41,18 @@ def main() -> None:
 
     # D.4 — influence of N (local steps) and m (sampled clients)
     for n_local in (5, 20):
-        for name, mk in (("md", MDSampler), ("alg2", None)):
-            s = mk(pop, 10, seed=0) if mk else Algorithm2Sampler(pop, 10, update_dim=d, seed=0)
-            r = run_fl(ds, s, rounds=ROUNDS, n_local=n_local, batch=50, lr=0.05)
-            emit(f"ablation_D4/N={n_local}/{name}", 0.0, f"loss={r['final_loss']:.4f}")
+        for name, key in (("md", "md"), ("algorithm2", "alg2")):
+            r = run_spec(_spec({"name": name, "m": 10}, n_local_steps=n_local), dataset=ds)
+            emit(f"ablation_D4/N={n_local}/{key}", 0.0, f"loss={r['final_loss']:.4f}")
     for m in (5, 20):
-        for name, mk in (("md", MDSampler), ("alg2", None)):
-            s = mk(pop, m, seed=0) if mk else Algorithm2Sampler(pop, m, update_dim=d, seed=0)
-            r = run_fl(ds, s, rounds=ROUNDS, n_local=10, batch=50, lr=0.05)
-            emit(f"ablation_D4/m={m}/{name}", 0.0, f"loss={r['final_loss']:.4f}")
+        for name, key in (("md", "md"), ("algorithm2", "alg2")):
+            r = run_spec(_spec({"name": name, "m": m}), dataset=ds)
+            emit(f"ablation_D4/m={m}/{key}", 0.0, f"loss={r['final_loss']:.4f}")
 
     # D.5 — FedProx (mu = 0.1): clustered sampling still helps
-    for name, mk in (("md", MDSampler), ("alg2", None)):
-        s = mk(pop, 10, seed=0) if mk else Algorithm2Sampler(pop, 10, update_dim=d, seed=0)
-        r = run_fl(ds, s, rounds=ROUNDS, n_local=10, batch=50, lr=0.05, mu=0.1)
-        emit(f"ablation_D5/fedprox/{name}", 0.0, f"loss={r['final_loss']:.4f}")
+    for name, key in (("md", "md"), ("algorithm2", "alg2")):
+        r = run_spec(_spec({"name": name, "m": 10}, fedprox_mu=0.1), dataset=ds)
+        emit(f"ablation_D5/fedprox/{key}", 0.0, f"loss={r['final_loss']:.4f}")
 
 
 if __name__ == "__main__":

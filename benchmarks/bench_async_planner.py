@@ -28,7 +28,7 @@ import numpy as np
 from benchmarks.common import emit
 
 
-def _dataset(n_clients: int, dim: int, per_client: int):
+def _random_clients(n_clients: int, dim: int, per_client: int):
     from repro.data.federated import ClientData, FederatedDataset
 
     rng = np.random.default_rng(0)
@@ -40,31 +40,38 @@ def _dataset(n_clients: int, dim: int, per_client: int):
     return FederatedDataset(clients)
 
 
+def _register_dataset():
+    from repro.fl.experiment import DATASETS
+
+    if "random_clients" not in DATASETS:
+        DATASETS.register("random_clients", _random_clients)
+
+
 def _mean_round_time(dataset, planner: str, *, m: int, rounds: int, dim: int):
     """(mean seconds per round after compile warm-up, mean plan lag)."""
-    from repro.core import Algorithm2Sampler
-    from repro.fl import FLConfig, FederatedServer
-    from repro.fl.aggregation import flatten_params
-    from repro.models.simple import init_mlp
-    from repro.optim import sgd
+    from repro.fl.experiment import build_experiment
 
-    params = init_mlp((dim, 32, 10), seed=1)
-    d = int(flatten_params(params).shape[0])
-    sampler = Algorithm2Sampler(
-        dataset.population, m, update_dim=d, seed=0, planner=planner
-    )
-    cfg = FLConfig(
-        n_rounds=rounds, n_local_steps=10, batch_size=32,
-        seed=0, eval_every=10**9,
-    )
-    srv = FederatedServer(dataset, sampler, params, sgd(0.05), cfg)
-    srv.run_round(0)  # warm-up: engine compile + first rebuild
-    t0 = time.perf_counter()
-    for t in range(1, rounds + 1):
-        srv.run_round(t)
-    dt = (time.perf_counter() - t0) / rounds
-    lag = float(np.mean(srv.history.series("plan_lag_rounds")[1:]))
-    sampler.close()
+    spec = {
+        "data": {
+            "name": "random_clients",
+            "options": {"n_clients": dataset.n_clients, "dim": dim, "per_client": 60},
+        },
+        "sampler": {"name": "algorithm2", "m": m},
+        "planner": {"mode": planner},
+        "train": {
+            "n_rounds": rounds, "n_local_steps": 10, "batch_size": 32,
+            "lr": 0.05, "seed": 0, "eval_every": 10**9, "hidden": [32],
+        },
+    }
+    # the context manager owns sampler.close() — the async worker used to
+    # leak here whenever a run raised between construction and close()
+    with build_experiment(spec, dataset=dataset) as srv:
+        srv.run_round(0)  # warm-up: engine compile + first rebuild
+        t0 = time.perf_counter()
+        for t in range(1, rounds + 1):
+            srv.run_round(t)
+        dt = (time.perf_counter() - t0) / rounds
+        lag = float(np.mean(srv.history.series("plan_lag_rounds")[1:]))
     return dt, lag
 
 
@@ -124,11 +131,12 @@ def main(argv: "list[str] | None" = None) -> None:
     # parse_args(None) would read the harness's own sys.argv and SystemExit
     args = ap.parse_args([] if argv is None else argv)
 
+    _register_dataset()
     dim = 16
     ns = (40,) if args.smoke else (200, 400)
     rounds = 2 if args.smoke else 6
     for n in ns:
-        dataset = _dataset(n_clients=n, dim=dim, per_client=60)
+        dataset = _random_clients(n_clients=n, dim=dim, per_client=60)
         secs, lags = {}, {}
         for planner in ("sync", "async"):
             secs[planner], lags[planner] = _mean_round_time(

@@ -29,8 +29,8 @@ if "jax" not in sys.modules:  # standalone run: give ourselves a host mesh
 
 
 def _rounds_per_sec(dataset, m: int, mesh_spec, *, rounds: int, dim: int, cfg_kw):
-    from repro.core import MDSampler
     from repro.fl import FLConfig, FederatedServer
+    from repro.fl.experiment import build_sampler
     from repro.models.simple import init_mlp
     from repro.optim import sgd
 
@@ -39,14 +39,13 @@ def _rounds_per_sec(dataset, m: int, mesh_spec, *, rounds: int, dim: int, cfg_kw
         n_rounds=rounds, seed=0, eval_every=10**9, engine="batched",
         mesh_spec=mesh_spec, **cfg_kw,
     )
-    srv = FederatedServer(
-        dataset, MDSampler(dataset.population, m, seed=0), params, sgd(0.05), cfg
-    )
-    srv.run_round(0)  # warm-up: compile
-    t0 = time.perf_counter()
-    for t in range(1, rounds + 1):
-        srv.run_round(t)
-    return rounds / (time.perf_counter() - t0), srv._engine.per_device_staged_bytes()
+    sampler = build_sampler({"name": "md", "m": m, "seed": 0}, dataset.population)
+    with FederatedServer(dataset, sampler, params, sgd(0.05), cfg) as srv:
+        srv.run_round(0)  # warm-up: compile
+        t0 = time.perf_counter()
+        for t in range(1, rounds + 1):
+            srv.run_round(t)
+        return rounds / (time.perf_counter() - t0), srv._engine.per_device_staged_bytes()
 
 
 def main(argv: "list[str] | None" = None) -> None:

@@ -17,8 +17,8 @@ import time
 import numpy as np
 
 from benchmarks.common import emit
-from repro.core import MDSampler
 from repro.fl import FLConfig, FederatedServer
+from repro.fl.experiment import build_sampler
 from repro.models.simple import init_mlp
 from repro.optim import sgd
 
@@ -43,14 +43,13 @@ def _rounds_per_sec(dataset, m: int, engine: str, *, rounds: int, dim: int) -> f
         n_rounds=rounds, n_local_steps=10, batch_size=32,
         seed=0, eval_every=10**9, engine=engine,
     )
-    srv = FederatedServer(
-        dataset, MDSampler(dataset.population, m, seed=0), params, sgd(0.05), cfg
-    )
-    srv.run_round(0)  # warm-up: compile
-    t0 = time.perf_counter()
-    for t in range(1, rounds + 1):
-        srv.run_round(t)
-    return rounds / (time.perf_counter() - t0)
+    sampler = build_sampler({"name": "md", "m": m, "seed": 0}, dataset.population)
+    with FederatedServer(dataset, sampler, params, sgd(0.05), cfg) as srv:
+        srv.run_round(0)  # warm-up: compile
+        t0 = time.perf_counter()
+        for t in range(1, rounds + 1):
+            srv.run_round(t)
+        return rounds / (time.perf_counter() - t0)
 
 
 def main(argv: "list[str] | None" = None) -> None:

@@ -4,10 +4,11 @@
    so long-unsampled clients return to the cold-start cluster (the paper
    clusters on arbitrarily stale similarity). Compared at γ ∈ {1.0 (paper),
    0.8, 0.5} under a small m (staleness is worst when few clients refresh
-   per round).
+   per round) — a one-line spec sweep over ``staleness_decay``.
 2. device-offloaded similarity — Algorithm 2 with the Pallas similarity
    kernel as its distance backend (interpret mode here; MXU path on TPU),
-   asserting identical sampling plans to the numpy host path.
+   asserting identical sampling plans to the numpy host path. The two
+   backends differ by one spec option (``distance_fn``).
 """
 from __future__ import annotations
 
@@ -15,31 +16,36 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit, run_fl
-from repro.core import Algorithm2Sampler, validate_plan
-from repro.fl import dirichlet_labels
-from repro.fl.aggregation import flatten_params
-from repro.models.simple import init_mlp
+from benchmarks.common import PAPER_TRAIN, emit, run_spec
+from repro.core import validate_plan
+from repro.fl.experiment import DataSpec, build_dataset, build_sampler
 
 DIM = 32
 ROUNDS = 12
 
+DATA = {"name": "dirichlet_labels", "options": {"alpha": 0.01, "dim": DIM, "noise": 2.5, "seed": 0}}
+
 
 def main() -> None:
-    ds = dirichlet_labels(alpha=0.01, dim=DIM, noise=2.5, seed=0)
+    ds = build_dataset(DataSpec.from_dict(DATA))
     pop = ds.population
-    d = int(flatten_params(init_mlp((DIM, 50, 10))).shape[0])
 
     # NOTE: the decay must be paired with a magnitude-sensitive measure —
     # arccos is scale-invariant, so uniformly shrinking stale vectors would
     # not change any angle (verified: identical runs under arccos). L2 sees
     # the decayed vectors drift toward the zero / cold-start cluster.
     for gamma in (1.0, 0.8, 0.5):
-        s = Algorithm2Sampler(
-            pop, 5, update_dim=d, seed=0, staleness_decay=gamma, measure="l2"
-        )
+        spec = {
+            "data": DATA,
+            "sampler": {
+                "name": "algorithm2",
+                "m": 5,
+                "options": {"staleness_decay": gamma, "measure": "l2"},
+            },
+            "train": {"n_rounds": ROUNDS, **PAPER_TRAIN},
+        }
         t0 = time.perf_counter()
-        r = run_fl(ds, s, rounds=ROUNDS, n_local=10, batch=50, lr=0.05)
+        r = run_spec(spec, dataset=ds)
         emit(
             f"beyond/staleness_decay={gamma}",
             (time.perf_counter() - t0) * 1e6 / ROUNDS,
@@ -47,18 +53,25 @@ def main() -> None:
         )
 
     # kernel-backed similarity must produce the identical plan
-    from repro.kernels.similarity.ops import make_distance_fn
-
     rng = np.random.default_rng(0)
+    d = 128
     G = rng.normal(size=(pop.n_clients, d))
-    host = Algorithm2Sampler(pop, 10, update_dim=d, seed=0, distance_fn="numpy")
-    dev = Algorithm2Sampler(pop, 10, update_dim=d, seed=0, distance_fn=make_distance_fn(interpret=True))
+    host, dev = (
+        build_sampler(
+            {"name": "algorithm2", "m": 10, "options": {"distance_fn": backend}},
+            pop,
+            update_dim=d,
+        )
+        for backend in ("numpy", "pallas-interpret")
+    )
     ids = np.arange(pop.n_clients)
     host.observe_updates(ids, G)
     dev.observe_updates(ids, G)
     validate_plan(dev.plan, pop)
     same = np.allclose(host.plan.r, dev.plan.r)
     emit("beyond/pallas_similarity_plan_identical", 0.0, f"identical={same}")
+    host.close()
+    dev.close()
 
 
 if __name__ == "__main__":

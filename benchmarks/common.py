@@ -1,4 +1,4 @@
-"""Shared benchmark helpers: timed CSV rows + small FL runs."""
+"""Shared benchmark helpers: timed CSV rows + spec-driven FL runs."""
 from __future__ import annotations
 
 import time
@@ -6,6 +6,10 @@ import time
 import numpy as np
 
 ROWS: list[tuple[str, float, str]] = []
+
+#: train-hyperparameter block shared by the paper-figure scenario matrices
+#: (the paper's N=10 local steps, B=50, lr=0.05 on the 1x50 MLP)
+PAPER_TRAIN = {"n_local_steps": 10, "batch_size": 50, "lr": 0.05, "seed": 0}
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
@@ -24,22 +28,8 @@ def timed(fn, *args, repeats: int = 3, warmup: int = 1, **kw) -> tuple[float, ob
     return dt * 1e6, out
 
 
-def run_fl(dataset, sampler, *, rounds, n_local, batch, lr, mu=0.0, seed=0):
-    """Small FL run returning (final rolling loss, final acc, mean distinct classes)."""
-    import jax
-
-    from repro.fl import FederatedServer, FLConfig
-    from repro.models.simple import fedprox_loss, init_mlp
-
-    dim = dataset.clients[0].x_train.shape[1]
-    params = init_mlp((dim, 50, 10), seed=1)  # the paper's 1x50 hidden MLP
-    from repro.optim import sgd
-
-    cfg = FLConfig(n_rounds=rounds, n_local_steps=n_local, batch_size=batch, seed=seed, fedprox_mu=mu)
-    kw = {"loss_fn": fedprox_loss} if mu else {}
-    srv = FederatedServer(dataset, sampler, params, sgd(lr), cfg, **kw)
-    hist = srv.run()
-    del jax
+def summarize(hist, rounds: int) -> dict:
+    """The figure-level summary statistics of one run's History."""
     losses = hist.series("train_loss")
     roll = hist.rolling("train_loss", window=min(10, rounds))
     return {
@@ -49,3 +39,20 @@ def run_fl(dataset, sampler, *, rounds, n_local, batch, lr, mu=0.0, seed=0):
         "mean_distinct_classes": float(hist.series("n_distinct_classes").mean()),
         "mean_distinct_clients": float(hist.series("n_distinct_clients").mean()),
     }
+
+
+def run_spec(spec, *, dataset=None, on_round=None) -> dict:
+    """Run one declarative experiment and return its summary statistics.
+
+    ``spec`` is an ``ExperimentSpec`` or its dict form; ``dataset``
+    short-circuits the data section so a scenario matrix sharing one
+    partition builds it once. The context manager guarantees async planner
+    workers are released, and ``on_round`` streams each ``RoundRecord`` as
+    it lands (the server's telemetry hook) — no hand-rolled collection.
+    """
+    from repro.fl.experiment import ExperimentSpec, build_experiment
+
+    spec = ExperimentSpec.from_dict(spec) if isinstance(spec, dict) else spec
+    with build_experiment(spec, dataset=dataset) as srv:
+        hist = srv.run(on_round=on_round)
+    return summarize(hist, spec.train.n_rounds)

@@ -6,38 +6,47 @@ balanced sizes, m = 10). Reports final rolling loss, accuracy and the
 per-round class representativity — the paper's key qualitative claims:
 clustered sampling always aggregates 10 distinct clients and Algorithm 2
 approaches 'target'.
+
+The whole figure is one scenario matrix of experiment specs — adding a
+scheme to the comparison is one more dict (see repro.fl.experiment).
 """
 from __future__ import annotations
 
 import time
 
-import numpy as np
-
-from benchmarks.common import emit, run_fl
-from repro.core import SAMPLERS, Algorithm2Sampler, TargetSampler
-from repro.fl import by_class_shards
-from repro.fl.aggregation import flatten_params
-from repro.models.simple import init_mlp
+from benchmarks.common import PAPER_TRAIN, emit, run_spec
+from repro.fl.experiment import DataSpec, build_dataset
 
 ROUNDS = 25
 DIM = 32
 
+DATA = {
+    "name": "by_class_shards",
+    "options": {"dim": DIM, "noise": 2.5, "train_per_client": 200, "test_per_client": 30, "seed": 0},
+}
+
+SCENARIOS = {
+    "md": {"name": "md", "m": 10},
+    "algorithm1": {"name": "algorithm1", "m": 10},
+    "algorithm2": {"name": "algorithm2", "m": 10},
+    "target": {
+        "name": "target",
+        "m": 10,
+        "options": {"groups": [list(range(i * 10, (i + 1) * 10)) for i in range(10)]},
+    },
+}
+
 
 def main() -> None:
-    ds = by_class_shards(dim=DIM, noise=2.5, train_per_client=200, test_per_client=30, seed=0)
-    pop = ds.population
-    m = 10
-    d = int(flatten_params(init_mlp((DIM, 50, 10))).shape[0])
-
-    samplers = {
-        "md": SAMPLERS["md"](pop, m, seed=0),
-        "algorithm1": SAMPLERS["algorithm1"](pop, m, seed=0),
-        "algorithm2": Algorithm2Sampler(pop, m, update_dim=d, seed=0),
-        "target": TargetSampler(pop, m, [np.arange(i * 10, (i + 1) * 10) for i in range(10)], seed=0),
-    }
-    for name, sampler in samplers.items():
+    ds = build_dataset(DataSpec.from_dict(DATA))  # shared across the matrix
+    for name, sampler in SCENARIOS.items():
+        spec = {
+            "data": DATA,
+            "sampler": sampler,
+            "train": {"n_rounds": ROUNDS, **PAPER_TRAIN},
+        }
         t0 = time.perf_counter()
-        res = run_fl(ds, sampler, rounds=ROUNDS, n_local=10, batch=50, lr=0.05)
+        res = run_spec(spec, dataset=ds)
         us = (time.perf_counter() - t0) * 1e6 / ROUNDS
         emit(
             f"fig1/{name}",

@@ -1,39 +1,34 @@
 """Figure 2 reproduction: Dirichlet(α) heterogeneity sweep on the paper's
 unbalanced 100-client profile. The paper's claim: the smaller α (more
-heterogeneous), the larger the improvement of clustered sampling over MD."""
+heterogeneous), the larger the improvement of clustered sampling over MD.
+
+The sweep is a spec matrix over α × sampler (repro.fl.experiment)."""
 from __future__ import annotations
 
 import time
 
-import numpy as np
-
-from benchmarks.common import emit, run_fl
-from repro.core import Algorithm2Sampler, MDSampler
-from repro.fl import dirichlet_labels
-from repro.fl.aggregation import flatten_params
-from repro.models.simple import init_mlp
+from benchmarks.common import PAPER_TRAIN, emit, run_spec
+from repro.fl.experiment import DataSpec, build_dataset
 
 ALPHAS = (0.001, 0.01, 0.1, 10.0)
 ROUNDS = 20
 DIM = 32
 
+SAMPLER_SPECS = ({"name": "md", "m": 10}, {"name": "algorithm2", "m": 10})
+
 
 def main() -> None:
-    d = int(flatten_params(init_mlp((DIM, 50, 10))).shape[0])
     for alpha in ALPHAS:
-        ds = dirichlet_labels(alpha=alpha, dim=DIM, noise=2.5, seed=0)
-        pop = ds.population
+        data = {"name": "dirichlet_labels", "options": {"alpha": alpha, "dim": DIM, "noise": 2.5, "seed": 0}}
+        ds = build_dataset(DataSpec.from_dict(data))
         results = {}
-        for name, sampler in (
-            ("md", MDSampler(pop, 10, seed=0)),
-            ("algorithm2", Algorithm2Sampler(pop, 10, update_dim=d, seed=0)),
-        ):
+        for sampler in SAMPLER_SPECS:
+            spec = {"data": data, "sampler": sampler, "train": {"n_rounds": ROUNDS, **PAPER_TRAIN}}
             t0 = time.perf_counter()
-            results[name] = run_fl(ds, sampler, rounds=ROUNDS, n_local=10, batch=50, lr=0.05)
+            results[sampler["name"]] = r = run_spec(spec, dataset=ds)
             us = (time.perf_counter() - t0) * 1e6 / ROUNDS
-            r = results[name]
             emit(
-                f"fig2/alpha={alpha}/{name}",
+                f"fig2/alpha={alpha}/{sampler['name']}",
                 us,
                 f"loss={r['final_loss']:.4f};acc={r['final_acc']:.3f}",
             )

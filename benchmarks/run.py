@@ -1,5 +1,10 @@
 """Benchmark harness — one module per paper table/figure.
 
+``--spec '<json>'`` (inline or a file path) instead runs ONE declarative
+experiment through ``repro.fl.experiment`` and streams its per-round
+records — the scenario door for comparison studies and the tier-1 smoke
+for the spec layer.
+
 Prints ``name,us_per_call,derived`` CSV rows:
   fig1_controlled      — Figure 1 (controlled MNIST-style setting)
   fig2_dirichlet       — Figure 2 (Dirichlet-α heterogeneity sweep)
@@ -14,6 +19,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import time
 import traceback
@@ -49,7 +55,38 @@ MODULES = [
 ]
 
 
-def main() -> None:
+def run_one_spec(spec_arg: str) -> None:
+    """Run a single experiment spec (inline JSON or a path to a JSON file)."""
+    from benchmarks.common import emit, run_spec
+    from repro.fl.experiment import ExperimentSpec
+
+    spec = ExperimentSpec.from_arg(spec_arg)
+    label = f"spec/{spec.data.name}/{spec.sampler.name}"
+    print("name,us_per_call,derived")
+    t0 = time.perf_counter()
+    res = run_spec(  # per-round records stream through the server's hook
+        spec,
+        on_round=lambda rec: emit(
+            f"{label}/round={rec.round}", 0.0,
+            f"loss={rec.train_loss:.4f};plan_v={rec.plan_version};"
+            f"lag={rec.plan_lag_rounds}",
+        ),
+    )
+    us = (time.perf_counter() - t0) * 1e6 / spec.train.n_rounds
+    emit(label, us, f"loss={res['final_loss']:.4f};acc={res['final_acc']:.3f}")
+
+
+def main(argv: "list[str] | None" = None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--spec", default=None,
+        help="experiment-spec JSON (inline or a file path): run that one "
+        "declarative scenario instead of the full benchmark sweep",
+    )
+    args = ap.parse_args(sys.argv[1:] if argv is None else argv)
+    if args.spec:
+        run_one_spec(args.spec)
+        return
     print("name,us_per_call,derived")
     failures = []
     for name, mod in MODULES:

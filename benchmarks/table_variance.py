@@ -10,13 +10,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import emit, timed
-from repro.core import (
-    Algorithm1Sampler,
-    Algorithm2Sampler,
-    ClientPopulation,
-    MDSampler,
-    max_draws_bound,
-)
+from repro.core import ClientPopulation, max_draws_bound
 from repro.core.statistics import (
     clustered_inclusion_probability,
     clustered_weight_variance,
@@ -31,14 +25,15 @@ PROFILE = np.concatenate(
 
 
 def main() -> None:
+    from repro.fl.experiment import build_sampler
+
     pop = ClientPopulation(PROFILE)
     m, T = 10, 3000
     p = pop.importances
 
     samplers = {
-        "md": MDSampler(pop, m, seed=0),
-        "algorithm1": Algorithm1Sampler(pop, m, seed=0),
-        "algorithm2": Algorithm2Sampler(pop, m, update_dim=16, seed=0),
+        name: build_sampler({"name": name, "m": m, "seed": 0}, pop, update_dim=16)
+        for name in ("md", "algorithm1", "algorithm2")
     }
     v_md_theory = md_weight_variance(p, m)
     q_md_theory = md_inclusion_probability(p, m)
@@ -78,9 +73,11 @@ def main() -> None:
         0.0,
         f"theory={md_prob_all_distinct(np.full(100, 0.01), m):.4f};paper=0.63",
     )
-    s1 = Algorithm1Sampler(bal, m, seed=0)
+    s1 = build_sampler({"name": "algorithm1", "m": m, "seed": 0}, bal)
     distinct = np.mean([len(s1.sample(t).unique_clients) == m for t in range(500)])
     emit("variance_table/algorithm1_all_distinct_balanced", 0.0, f"mc={distinct:.3f};paper=1.0")
+    for s in (*samplers.values(), s1):
+        s.close()
 
 
 if __name__ == "__main__":

@@ -2,41 +2,44 @@
 unbalanced 100-client profile (10×100 … 10×1000 samples). The smaller α,
 the bigger clustered sampling's edge over MD sampling.
 
+Each run is one declarative experiment spec; the per-round progress line
+streams through the server's ``on_round`` telemetry hook.
+
 Run:  PYTHONPATH=src python examples/dirichlet_heterogeneity.py [--alpha 0.01]
 """
 import argparse
 
 import numpy as np
 
-from repro.core import Algorithm2Sampler, MDSampler
-from repro.fl import FederatedServer, FLConfig, dirichlet_labels
-from repro.fl.aggregation import flatten_params
-from repro.models.simple import init_mlp
-from repro.optim import sgd
+from repro.fl import DataSpec, build_dataset, build_experiment
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--alpha", type=float, default=0.01)
     ap.add_argument("--rounds", type=int, default=15)
+    ap.add_argument("--verbose", action="store_true", help="stream per-round records")
     args = ap.parse_args()
 
-    ds = dirichlet_labels(alpha=args.alpha, dim=32, noise=2.0, seed=0)
+    data = {"name": "dirichlet_labels", "options": {"alpha": args.alpha, "dim": 32, "noise": 2.0, "seed": 0}}
+    ds = build_dataset(DataSpec.from_dict(data))
     pop = ds.population
-    params = init_mlp((32, 50, 10), seed=1)
-    d = int(flatten_params(params).shape[0])
 
     print(f"Dirichlet(α={args.alpha}) — {ds.n_clients} clients, "
           f"{pop.total_samples} samples, m=10 sampled/round")
-    for name, sampler in (
-        ("MD", MDSampler(pop, 10, seed=0)),
-        ("Clustered-Alg2", Algorithm2Sampler(pop, 10, update_dim=d, seed=0)),
-    ):
-        srv = FederatedServer(
-            ds, sampler, params, sgd(0.05),
-            FLConfig(n_rounds=args.rounds, n_local_steps=10, batch_size=50, seed=0),
+    for name, sampler in (("MD", {"name": "md", "m": 10}),
+                          ("Clustered-Alg2", {"name": "algorithm2", "m": 10})):
+        spec = {
+            "data": data,
+            "sampler": sampler,
+            "train": {"n_rounds": args.rounds, "n_local_steps": 10, "batch_size": 50, "lr": 0.05, "seed": 0},
+        }
+        on_round = (
+            (lambda rec: print(f"    round {rec.round:3d}  loss {rec.train_loss:.4f}"))
+            if args.verbose else None
         )
-        hist = srv.run()
+        with build_experiment(spec, dataset=ds) as srv:
+            hist = srv.run(on_round=on_round)
         losses = hist.rolling("train_loss", 5)
         print(f"  {name:15s} loss: {losses[0]:.4f} -> {losses[-1]:.4f}   "
               f"acc: {np.nanmax(hist.series('test_acc')[-3:]):.3f}   "

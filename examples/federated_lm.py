@@ -9,6 +9,7 @@ combine realizes eq. (4). On a pod the exact same jitted step shards over
 Run:  PYTHONPATH=src python examples/federated_lm.py [--sampler algorithm1]
 """
 import argparse
+import contextlib
 import dataclasses
 
 import jax
@@ -31,15 +32,24 @@ def main() -> None:
         help="algorithm2 only: rebuild the plan inline or overlapped with "
         "the next round's local work",
     )
+    ap.add_argument(
+        "--rebuild-every", type=int, default=1,
+        help="algorithm2 only: re-cluster every k observed rounds "
+        "(PlannerSpec cadence; 1 = the paper's every-round rebuild)",
+    )
     ap.add_argument("--rounds", type=int, default=8)
     args = ap.parse_args()
 
     cfg = get_config("qwen3-0.6b", reduced=True)
     cfg = dataclasses.replace(cfg, d_model=64, vocab_size=256, n_heads=2, n_kv_heads=2, head_dim=32)
+    # sampler/planner are spec dicts: the same SamplerSpec/PlannerSpec path
+    # the host-tier experiments resolve (repro.fl.experiment)
+    planner = {"mode": args.planner, "rebuild_every": args.rebuild_every}
     fl = FLLMConfig(
         n_clients=16, m=4, n_rounds=args.rounds, n_local_steps=2,
         local_batch=2, seq_len=32, lr=0.1,
-        sampler=args.sampler, planner=args.planner,
+        sampler=args.sampler,
+        planner=planner if args.sampler == "algorithm2" else "sync",
     )
     pop = ClientPopulation(np.full(fl.n_clients, 1000))
     # only algorithm2's gradient store needs the flattened model size
@@ -48,15 +58,14 @@ def main() -> None:
         if args.sampler == "algorithm2"
         else 0
     )
-    sampler = make_lm_sampler(fl, pop, update_dim=d)
-    print(f"federated LM ({cfg.name}, {args.sampler}"
-          + (f", planner={args.planner}" if args.sampler == "algorithm2" else "")
-          + f"); {fl.n_clients} clients, m={fl.m}, N={fl.n_local_steps} local steps")
-    losses = run_federated_lm(cfg, fl, sampler)
+    with contextlib.closing(make_lm_sampler(fl, pop, update_dim=d)) as sampler:
+        print(f"federated LM ({cfg.name}, {args.sampler}"
+              + (f", planner={planner}" if args.sampler == "algorithm2" else "")
+              + f"); {fl.n_clients} clients, m={fl.m}, N={fl.n_local_steps} local steps")
+        losses = run_federated_lm(cfg, fl, sampler)
     for t, l in enumerate(losses):
         print(f"  round {t:2d}  mean local loss {l:.4f}")
     print(f"improved: {losses[-1] < losses[0]}")
-    sampler.close()
 
 
 if __name__ == "__main__":

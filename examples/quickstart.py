@@ -5,37 +5,43 @@ Reproduces the paper's controlled experiment (Fig. 1) at reduced scale:
 m=10 per round. Watch the per-round class representativity — MD sampling
 aggregates 6-8 distinct classes per round, clustered sampling always 10.
 
+The comparison is a scenario matrix of declarative experiment specs
+(``repro.fl.experiment``): each scheme is one dict, ``build_experiment``
+resolves it through the sampler registry, and the ``with`` block owns the
+sampler's background resources. Add your own scheme with
+``repro.core.register_sampler`` and one more dict.
+
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import Algorithm1Sampler, Algorithm2Sampler, MDSampler
-from repro.fl import FederatedServer, FLConfig, by_class_shards
-from repro.fl.aggregation import flatten_params
-from repro.models.simple import init_mlp
-from repro.optim import sgd
+from repro.fl import DataSpec, build_dataset, build_experiment
 
 ROUNDS = 15
 
+DATA = {
+    "name": "by_class_shards",
+    "options": {"dim": 32, "noise": 2.0, "train_per_client": 200, "test_per_client": 30, "seed": 0},
+}
+
+SCENARIOS = {
+    "MD sampling (Li et al. 2018)": {"name": "md", "m": 10},
+    "Clustered / Algorithm 1     ": {"name": "algorithm1", "m": 10},
+    "Clustered / Algorithm 2     ": {"name": "algorithm2", "m": 10},
+}
+
 
 def main() -> None:
-    ds = by_class_shards(dim=32, noise=2.0, train_per_client=200, test_per_client=30, seed=0)
-    pop = ds.population
-    params = init_mlp((32, 50, 10), seed=1)  # the paper's 1-hidden-layer MLP
-    d = int(flatten_params(params).shape[0])
-
-    samplers = {
-        "MD sampling (Li et al. 2018)": MDSampler(pop, 10, seed=0),
-        "Clustered / Algorithm 1     ": Algorithm1Sampler(pop, 10, seed=0),
-        "Clustered / Algorithm 2     ": Algorithm2Sampler(pop, 10, update_dim=d, seed=0),
-    }
+    ds = build_dataset(DataSpec.from_dict(DATA))  # one partition, three schemes
     print(f"{'sampler':30s} {'final loss':>10s} {'test acc':>9s} {'classes/round':>14s}")
-    for name, sampler in samplers.items():
-        srv = FederatedServer(
-            ds, sampler, params, sgd(0.05),
-            FLConfig(n_rounds=ROUNDS, n_local_steps=10, batch_size=50, seed=0),
-        )
-        hist = srv.run()
+    for name, sampler in SCENARIOS.items():
+        spec = {
+            "data": DATA,
+            "sampler": sampler,
+            "train": {"n_rounds": ROUNDS, "n_local_steps": 10, "batch_size": 50, "lr": 0.05, "seed": 0},
+        }
+        with build_experiment(spec, dataset=ds) as srv:
+            hist = srv.run()
         print(
             f"{name:30s} {hist.rolling('train_loss', 5)[-1]:10.4f} "
             f"{np.nanmax(hist.series('test_acc')[-3:]):9.3f} "

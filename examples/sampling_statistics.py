@@ -12,12 +12,12 @@ import argparse
 import numpy as np
 
 from repro.core import (
-    Algorithm2Sampler,
     ClientPopulation,
     build_plan_algorithm1,
     max_draws_bound,
     validate_plan,
 )
+from repro.fl.experiment import build_sampler
 from repro.core.statistics import (
     clustered_inclusion_probability,
     clustered_weight_variance,
@@ -48,7 +48,7 @@ def main() -> None:
     validate_plan(plan1, pop)
     show_plan("Algorithm 1 (sample-size urns)", plan1.r)
 
-    s2 = Algorithm2Sampler(pop, m, update_dim=8, seed=0)
+    s2 = build_sampler({"name": "algorithm2", "m": m, "seed": 0}, pop, update_dim=8)
     rng = np.random.default_rng(0)
     s2.observe_updates(np.arange(pop.n_clients), rng.normal(size=(pop.n_clients, 8)))
     show_plan("Algorithm 2 (similarity urns, random gradients)", s2.plan.r)

@@ -18,4 +18,14 @@ python -m benchmarks.bench_round_engine --smoke
 python -m benchmarks.bench_engine_sharded --smoke
 python -m benchmarks.bench_async_planner --smoke
 
+echo "== tier-1: spec-driven experiment smoke (registry + spec parsing) =="
+python -m benchmarks.run --spec '{
+  "data": {"name": "by_class_shards",
+           "options": {"n_classes": 4, "clients_per_class": 3, "dim": 8,
+                        "train_per_client": 40, "test_per_client": 8, "seed": 0}},
+  "sampler": {"name": "algorithm2", "m": 4},
+  "planner": {"mode": "async", "rebuild_every": 2},
+  "train": {"n_rounds": 3, "n_local_steps": 4, "batch_size": 16, "hidden": [16]}
+}'
+
 echo "tier-1 OK"

@@ -8,8 +8,10 @@ Public API:
   - statistics: closed-form variance / inclusion-probability formulas
 """
 from repro.core.types import ClientPopulation, SamplingPlan, SampleResult
+from repro.core.registry import Registry
 from repro.core.samplers import (
     SAMPLERS,
+    register_sampler,
     Algorithm1Sampler,
     Algorithm2Sampler,
     ClientSampler,
@@ -42,5 +44,7 @@ __all__ = [
     "validate_plan",
     "max_draws_bound",
     "statistics",
+    "Registry",
     "SAMPLERS",
+    "register_sampler",
 ]

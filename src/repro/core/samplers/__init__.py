@@ -1,4 +1,11 @@
-"""Client-selection schemes (the paper's core contribution lives here)."""
+"""Client-selection schemes (the paper's core contribution lives here).
+
+``SAMPLERS`` is the seed *registry* of schemes: spec-driven construction
+(``repro.fl.experiment.SamplerSpec``) resolves names through it, and
+``register_sampler("mine", MySampler)`` plugs a new scheme into every
+driver, benchmark and CLI that speaks specs.
+"""
+from repro.core.registry import Registry
 from repro.core.samplers.base import ClientSampler, max_draws_bound, validate_plan
 from repro.core.samplers.uniform import UniformSampler
 from repro.core.samplers.md import MDSampler
@@ -7,13 +14,18 @@ from repro.core.samplers.algorithm1 import Algorithm1Sampler, build_plan_algorit
 from repro.core.samplers.algorithm2 import Algorithm2Sampler, build_plan_algorithm2
 from repro.core.samplers.target import TargetSampler, build_plan_target
 
-SAMPLERS = {
-    "uniform": UniformSampler,
-    "md": MDSampler,
-    "algorithm1": Algorithm1Sampler,
-    "algorithm2": Algorithm2Sampler,
-    "target": TargetSampler,
-}
+SAMPLERS = Registry(
+    "sampler",
+    {
+        "uniform": UniformSampler,
+        "md": MDSampler,
+        "algorithm1": Algorithm1Sampler,
+        "algorithm2": Algorithm2Sampler,
+        "target": TargetSampler,
+    },
+)
+
+register_sampler = SAMPLERS.register
 
 __all__ = [
     "ClientSampler",
@@ -28,5 +40,7 @@ __all__ = [
     "build_plan_target",
     "validate_plan",
     "max_draws_bound",
+    "Registry",
     "SAMPLERS",
+    "register_sampler",
 ]

@@ -125,6 +125,7 @@ class Algorithm2Sampler(ClusteredSampler):
         distance_fn: Union[DistanceFn, str, None] = "auto",
         staleness_decay: float = 1.0,
         planner: str = "sync",
+        rebuild_every: int = 1,
     ):
         """``staleness_decay`` < 1 is a beyond-paper extension: every round,
         stored representative gradients shrink by this factor, so clients
@@ -142,7 +143,11 @@ class Algorithm2Sampler(ClusteredSampler):
 
         ``planner`` selects when Algorithm 2's O(n²d + n³) rebuild runs:
         ``"sync"`` inside ``observe_updates`` (the parity reference) or
-        ``"async"`` on a background worker while the next round trains."""
+        ``"async"`` on a background worker while the next round trains.
+        ``rebuild_every=k`` re-clusters only every k observed rounds — the
+        gradient store still absorbs every round's updates, so the k-th
+        rebuild sees all of them (``RoundRecord.plan_version`` records which
+        observation each round's plan incorporates)."""
         from repro.fl.gradient_store import GradientStore
         from repro.fl.planner import PlanService
 
@@ -160,7 +165,10 @@ class Algorithm2Sampler(ClusteredSampler):
             )
 
         self._service = PlanService(
-            build, mode=planner, initial_input=self._store.snapshot()
+            build,
+            mode=planner,
+            initial_input=self._store.snapshot(),
+            rebuild_every=rebuild_every,
         )
         super().__init__(population, self._service.current().plan, seed=seed)
 

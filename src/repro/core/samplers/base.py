@@ -64,11 +64,33 @@ class ClientSampler(abc.ABC):
 
     # Shared machinery -------------------------------------------------------
     def _draw_from_plan(self, plan: SamplingPlan) -> SampleResult:
-        """Sample l_k ~ W_k independently (the clustered-sampling draw)."""
+        """Sample l_k ~ W_k independently (the clustered-sampling draw).
+
+        One vectorized inverse-CDF draw over the (m, n) row-cumsum instead of
+        m ``rng.choice`` calls. The arithmetic mirrors ``Generator.choice``
+        exactly (per-row cumsum, normalize by the last entry, insertion index
+        with ties to the right) and ``rng.random(m)`` consumes the identical
+        uniform stream, so the draws are bit-for-bit those of the old loop.
+        """
         n = self.population.n_clients
-        clients = np.empty(plan.m, dtype=np.int64)
-        for k in range(plan.m):
-            clients[k] = self._rng.choice(n, p=plan.r[k])
+        cdf = np.cumsum(plan.r, axis=1)
+        total = cdf[:, -1]
+        # rng.choice validated p per call — keep failing fast on degenerate
+        # rows (NaN-poisoned gradients, zero-mass urns) instead of silently
+        # collapsing every such draw onto client 0
+        bad = ~(np.isfinite(total) & (total > 0))
+        if bad.any():
+            k = int(np.argmax(bad))
+            raise ValueError(
+                f"plan row {k} is not a probability distribution "
+                f"(total mass {total[k]!r}); cannot draw from it"
+            )
+        cdf /= total[:, None]
+        u = self._rng.random(plan.m)
+        # searchsorted(side="right") per row: #{i: cdf[k,i] <= u_k}; u < 1 and
+        # cdf[k,-1] == 1 exactly, so the index never reaches n. A zero-mass
+        # client repeats its predecessor's cdf value and can never be hit.
+        clients = (cdf <= u[:, None]).sum(axis=1).astype(np.int64)
         counts = np.bincount(clients, minlength=n)
         return SampleResult(clients=clients, agg_weights=counts / plan.m)
 

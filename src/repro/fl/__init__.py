@@ -6,11 +6,24 @@ from repro.fl.aggregation import (
     weighted_tree_sum,
     flatten_params,
 )
-from repro.fl.engine import BatchedRoundEngine, batched_round_step
+from repro.fl.engine import BatchedRoundEngine, ENGINES, batched_round_step, register_engine
 from repro.fl.gradient_store import GradientStore
 from repro.fl.planner import PlanService, VersionedPlan
 from repro.fl.server import EmptyRoundError, FederatedServer, FLConfig
 from repro.fl.history import History, RoundRecord
+from repro.fl.experiment import (
+    DATASETS,
+    DataSpec,
+    EngineSpec,
+    ExperimentSpec,
+    PlannerSpec,
+    SamplerSpec,
+    TrainSpec,
+    build_dataset,
+    build_experiment,
+    build_sampler,
+    register_dataset,
+)
 
 __all__ = [
     "by_class_shards",
@@ -33,4 +46,17 @@ __all__ = [
     "FLConfig",
     "History",
     "RoundRecord",
+    "ENGINES",
+    "register_engine",
+    "DATASETS",
+    "register_dataset",
+    "DataSpec",
+    "SamplerSpec",
+    "PlannerSpec",
+    "EngineSpec",
+    "TrainSpec",
+    "ExperimentSpec",
+    "build_dataset",
+    "build_sampler",
+    "build_experiment",
 ]

@@ -49,6 +49,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core.registry import Registry
 from repro.fl.aggregation import aggregate_stacked, flatten_params
 from repro.fl.client import LossFn, local_steps
 from repro.launch.mesh import data_parallel_degree, leading_batch_spec
@@ -248,3 +249,27 @@ class BatchedRoundEngine:
         # into G without a host round-trip (the (m_slots, d) -> (c, d) slice
         # compiles one tiny gather per distinct-count, c <= m_slots of them)
         return new_params, updates[:c], np.asarray(losses)[:c]
+
+
+# --------------------------------------------------------------------------
+# engine registry: FLConfig.engine resolves through this, so alternative
+# round executors plug into the server (and the spec layer) by name
+# --------------------------------------------------------------------------
+def _batched_engine(dataset, m: int, config, mesh):
+    return BatchedRoundEngine(
+        dataset, m, config.n_local_steps, config.batch_size, mesh=mesh
+    )
+
+
+def _compat_engine(dataset, m: int, config, mesh):
+    """The per-client reference loop lives in the server; no engine object."""
+    del dataset, m, config, mesh
+    return None
+
+
+#: name -> factory(dataset, m, config, mesh) returning an object with
+#: ``run_round(params, distinct, weights, stale_weight, rng, loss_fn, opt,
+#: fedprox_mu)`` — or None to select the server's compat per-client loop.
+ENGINES = Registry("engine", {"batched": _batched_engine, "compat": _compat_engine})
+
+register_engine = ENGINES.register

@@ -56,14 +56,32 @@ class PlanService:
     ``build_fn(snapshot) -> SamplingPlan`` is the (expensive) Algorithm 1/2
     plan constructor; ``initial_input`` is the snapshot for the version-0
     cold-start plan, built inline at construction either way.
+
+    ``rebuild_every=k`` sets the re-clustering cadence: only every k-th
+    observation triggers a rebuild (the skipped ones still advance the
+    observation counter, so :meth:`telemetry` lag — and therefore
+    ``RoundRecord.plan_version`` / ``plan_lag_rounds`` — records exactly
+    which observation the active plan incorporates and how far it trails).
+    Snapshots are cumulative store states, so skipping intermediates loses
+    nothing: the k-th snapshot contains every update since the last rebuild.
     """
 
     MODES = ("sync", "async")
 
-    def __init__(self, build_fn: BuildFn, *, mode: str = "sync", initial_input: Any = None):
+    def __init__(
+        self,
+        build_fn: BuildFn,
+        *,
+        mode: str = "sync",
+        initial_input: Any = None,
+        rebuild_every: int = 1,
+    ):
         if mode not in self.MODES:
             raise ValueError(f"unknown planner mode {mode!r}; choose from {self.MODES}")
+        if rebuild_every < 1:
+            raise ValueError(f"rebuild_every must be >= 1, got {rebuild_every}")
         self.mode = mode
+        self.rebuild_every = int(rebuild_every)
         self._build_fn = build_fn
         self._cond = threading.Condition()
         self._current = VersionedPlan(build_fn(initial_input), version=0)
@@ -82,10 +100,14 @@ class PlanService:
         Sync: builds inline; :meth:`poll` returns the fresh plan immediately
         after. Async: enqueues (replacing any not-yet-started snapshot) and
         returns without blocking — the round for ``t+1`` proceeds while the
-        worker rebuilds.
+        worker rebuilds. With ``rebuild_every=k``, observations that are not
+        a multiple of k only advance the counter (no rebuild, no snapshot
+        retained).
         """
         self._raise_pending_error()
         self._obs_seen += 1
+        if self._obs_seen % self.rebuild_every != 0:
+            return
         if self.mode == "sync":
             plan = self._build_fn(snapshot)
             with self._cond:

@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import Callable
+from typing import Callable, Optional
 
 import jax.numpy as jnp
 import numpy as np
@@ -34,7 +34,7 @@ from repro.core.samplers.base import ClientSampler
 from repro.data.federated import FederatedDataset
 from repro.fl.aggregation import aggregate_round, flatten_params
 from repro.fl.client import draw_batch_indices, local_update
-from repro.fl.engine import BatchedRoundEngine, staged_bytes
+from repro.fl.engine import ENGINES, staged_bytes
 from repro.fl.history import History, RoundRecord
 from repro.launch.mesh import resolve_fl_mesh
 from repro.models.simple import accuracy, classification_loss
@@ -49,7 +49,7 @@ class FLConfig:
     fedprox_mu: float = 0.0
     eval_every: int = 1
     seed: int = 0
-    engine: str = "batched"  # "batched" | "compat"
+    engine: str = "batched"  # any repro.fl.engine.ENGINES name
     # The batched engine pins every client's (padded) data on device. If that
     # exceeds this budget the server falls back to the memory-lean compat
     # loop with a warning — both paths are numerically equivalent.
@@ -77,8 +77,7 @@ class FederatedServer:
         loss_fn: Callable = classification_loss,
         acc_fn: Callable = accuracy,
     ):
-        if config.engine not in ("batched", "compat"):
-            raise ValueError(f"unknown engine {config.engine!r}")
+        engine_factory = ENGINES.get(config.engine)  # precise unknown-name error
         self.dataset = dataset
         self.sampler = sampler
         self.params = init_params
@@ -92,34 +91,27 @@ class FederatedServer:
         # classes each client can contribute — O(total samples) once, so the
         # per-round distinct-class count is a union of tiny class sets
         self._client_classes = [np.unique(c.y_train) for c in dataset.clients]
-        use_batched = config.engine == "batched"
-        mesh = resolve_fl_mesh(config.mesh_spec) if use_batched else None
-        # budget check against the *per-device* footprint: a mesh that shards
-        # the client axis is exactly how huge datasets stay stageable
-        need = staged_bytes(
-            dataset, sampler.m, config.n_local_steps, config.batch_size, mesh=mesh
+        mesh = (
+            resolve_fl_mesh(config.mesh_spec) if config.engine != "compat" else None
         )
-        if use_batched and need > config.max_staged_bytes:
-            fmt = lambda b: f"{b / 2**30:.2f} GiB" if b >= 2**30 else f"{b / 2**20:.2f} MiB"
-            warnings.warn(
-                f"batched engine would stage {fmt(need)} of padded "
-                f"client data per device (budget {fmt(config.max_staged_bytes)}); "
-                "falling back to the compat loop — raise FLConfig.max_staged_bytes "
-                "or shard further via FLConfig.mesh_spec to override",
-                stacklevel=2,
+        if config.engine == "batched":
+            # budget check against the *per-device* footprint: a mesh that
+            # shards the client axis is exactly how huge datasets stay stageable
+            need = staged_bytes(
+                dataset, sampler.m, config.n_local_steps, config.batch_size, mesh=mesh
             )
-            use_batched = False
-        self._engine = (
-            BatchedRoundEngine(
-                dataset,
-                sampler.m,
-                config.n_local_steps,
-                config.batch_size,
-                mesh=mesh,
-            )
-            if use_batched
-            else None
-        )
+            if need > config.max_staged_bytes:
+                fmt = lambda b: f"{b / 2**30:.2f} GiB" if b >= 2**30 else f"{b / 2**20:.2f} MiB"
+                warnings.warn(
+                    f"batched engine would stage {fmt(need)} of padded "
+                    f"client data per device (budget {fmt(config.max_staged_bytes)}); "
+                    "falling back to the compat loop — raise FLConfig.max_staged_bytes "
+                    "or shard further via FLConfig.mesh_spec to override",
+                    stacklevel=2,
+                )
+                engine_factory = ENGINES.get("compat")
+        self._engine = engine_factory(dataset, sampler.m, config, mesh)
+        self._closed = False
 
     # ------------------------------------------------------------------
     def _round_compat(self, distinct: np.ndarray, weights: np.ndarray, stale_weight: float):
@@ -209,7 +201,33 @@ class FederatedServer:
         self.history.append(rec)
         return rec
 
-    def run(self) -> History:
+    def run(self, on_round: Optional[Callable[[RoundRecord], None]] = None) -> History:
+        """Run all configured rounds; returns the full :class:`History`.
+
+        ``on_round`` is the streaming telemetry hook: called with each
+        :class:`RoundRecord` as it lands, so benchmarks/examples consume
+        records as the run progresses instead of re-implementing collection.
+        """
         for t in range(self.cfg.n_rounds):
-            self.run_round(t)
+            rec = self.run_round(t)
+            if on_round is not None:
+                on_round(rec)
         return self.history
+
+    # -- lifecycle ----------------------------------------------------------
+    # The server owns the sampler's background resources (async planner
+    # workers). ``with build_experiment(spec) as srv: ...`` — or any
+    # ``with FederatedServer(...)`` — guarantees they are released; before
+    # this, every benchmark that built a planner="async" sampler leaked its
+    # worker thread unless it remembered to call sampler.close() itself.
+    def close(self) -> None:
+        """Release the sampler's background resources; idempotent."""
+        if not self._closed:
+            self._closed = True
+            self.sampler.close()
+
+    def __enter__(self) -> "FederatedServer":
+        return self
+
+    def __exit__(self, exc_type, exc_val, exc_tb) -> None:
+        self.close()

@@ -148,6 +148,25 @@ def run_fl_round(
     return rec
 
 
+def planner_from_spec(spec_arg: str) -> str:
+    """Derive the planner variant to lower from an experiment-spec JSON.
+
+    ``spec_arg`` is inline JSON or a path to a JSON file with (at least)
+    ``sampler`` / ``planner`` sections (``repro.fl.experiment`` schema). A
+    sampler that consumes representative gradients lowers the planner-fed
+    round in the spec's planner mode; plan-free samplers lower the plain
+    round (``"none"``).
+    """
+    from repro.core.samplers import SAMPLERS
+    from repro.fl.experiment import PlannerSpec, SamplerSpec, load_spec_dict
+
+    d = load_spec_dict(spec_arg)
+    sampler = SamplerSpec.from_dict(d.get("sampler", {"name": "algorithm2", "m": 1}))
+    planner = PlannerSpec.from_dict(d.get("planner", {}))
+    consumes = getattr(SAMPLERS.get(sampler.name), "consumes_updates", False)
+    return planner.mode if consumes else "none"
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_NAMES, default="qwen3-0.6b")
@@ -158,11 +177,17 @@ def main() -> None:
         help="lower the planner-fed round variant (emits the (m, d) flat "
         "representative gradients Algorithm 2's gradient store consumes)",
     )
+    ap.add_argument(
+        "--spec", default=None,
+        help="experiment-spec JSON (inline or a file path); its sampler/"
+        "planner sections pick the round variant to lower (overrides --planner)",
+    )
     ap.add_argument("--out", default="experiments/dryrun")
     args = ap.parse_args()
+    planner = planner_from_spec(args.spec) if args.spec else args.planner
     run_fl_round(
         args.arch, n_local=args.local_steps, multi_pod=args.multi_pod,
-        out_dir=args.out, planner=args.planner,
+        out_dir=args.out, planner=planner,
     )
 
 

@@ -130,33 +130,59 @@ class FLLMConfig:
     local_batch: int = 4
     seq_len: int = 64
     lr: float = 0.05
-    sampler: str = "algorithm1"
+    # A registry name, a spec dict, or a repro.fl.experiment.SamplerSpec —
+    # all three resolve through the shared SamplerSpec path (the spec's
+    # m/seed default to this config's when given as a bare name).
+    sampler: "str | dict | object" = "algorithm1"
     seed: int = 0
-    # Plan-rebuild scheduling for similarity-based samplers: "sync" rebuilds
-    # on the critical path, "async" overlaps Algorithm 2's re-clustering
-    # with the next round's local work (repro.fl.planner).
-    planner: str = "sync"
+    # Plan-rebuild scheduling for similarity-based samplers: "sync" | "async"
+    # mode string, a spec dict, or a PlannerSpec ({"mode": "async",
+    # "rebuild_every": k} overlaps + throttles re-clustering, repro.fl.planner).
+    planner: "str | dict | object" = "sync"
+
+    def sampler_spec(self):
+        from repro.fl.experiment import SamplerSpec
+
+        s = self.sampler
+        if isinstance(s, dict):
+            # a dict may omit m/seed — they default to this config's
+            s = SamplerSpec.from_dict({"m": self.m, "seed": self.seed, **s})
+        if not isinstance(s, SamplerSpec):
+            return SamplerSpec(name=s, m=self.m, seed=self.seed)
+        if s.m != self.m:
+            raise ValueError(
+                f"SamplerSpec.m={s.m} contradicts FLLMConfig.m={self.m} — the "
+                "LM driver sizes every round's client axis (and its mesh "
+                "sharding) by fl.m, so the sampler must draw exactly that many"
+            )
+        return s
+
+    def planner_spec(self):
+        from repro.fl.experiment import PlannerSpec
+
+        p = self.planner
+        if isinstance(p, PlannerSpec):
+            return p
+        if isinstance(p, dict):
+            return PlannerSpec.from_dict(p)
+        return PlannerSpec(mode=p)
 
 
 def make_lm_sampler(fl: FLLMConfig, population, update_dim: int) -> ClientSampler:
-    """Build the sampler named by ``fl.sampler`` for the LM driver.
+    """Build ``fl.sampler`` for the LM driver via the shared SamplerSpec path.
 
     ``update_dim`` is the flattened model size — Algorithm 2's gradient
     store holds (n_clients, update_dim) f32 on device, and its plan service
-    runs in ``fl.planner`` mode.
+    runs under ``fl.planner``. Any scheme registered in
+    ``repro.core.samplers.SAMPLERS`` is reachable by name.
     """
-    from repro.core import Algorithm1Sampler, Algorithm2Sampler, MDSampler
+    from repro.fl.experiment import build_sampler
 
-    if fl.sampler == "md":
-        return MDSampler(population, fl.m, seed=fl.seed)
-    if fl.sampler == "algorithm1":
-        return Algorithm1Sampler(population, fl.m, seed=fl.seed)
-    if fl.sampler == "algorithm2":
-        return Algorithm2Sampler(
-            population, fl.m, update_dim, seed=fl.seed, planner=fl.planner
-        )
-    raise ValueError(
-        f"unknown fl sampler {fl.sampler!r}; choose from md | algorithm1 | algorithm2"
+    return build_sampler(
+        fl.sampler_spec(),
+        population,
+        planner=fl.planner_spec(),
+        update_dim=update_dim or None,
     )
 
 
