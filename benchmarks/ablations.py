@@ -1,23 +1,23 @@
 """Appendix D ablations: similarity measure (D.2), local work N and number of
 sampled clients m (D.4), FedProx regularization (D.5).
 
-Each ablation axis is a spec matrix (repro.fl.experiment): the varied knob
-lands in the sampler options or the train section, nothing is hand-wired.
+Each ablation axis is a ``SweepSpec`` through the shared campaign runner
+(``repro.fl.sweep``): the varied knob is a dotted-path axis into the base
+spec, nothing is hand-wired. Single replicate per cell (the ablations are
+qualitative); the replicate's data/train seeds still derive from the sweep's
+``root_seed`` so every ablation shares one partition, as in the appendix.
 """
 from __future__ import annotations
 
-import time
-
-from benchmarks.common import PAPER_TRAIN, emit, run_spec
-from repro.fl.experiment import DataSpec, build_dataset
+from benchmarks.common import PAPER_TRAIN, run_sweep_emit
 
 DIM = 32
 ROUNDS = 12
 
-DATA = {"name": "dirichlet_labels", "options": {"alpha": 0.01, "dim": DIM, "noise": 2.5, "seed": 0}}
+DATA = {"name": "dirichlet_labels", "options": {"alpha": 0.01, "dim": DIM, "noise": 2.5}}
 
 
-def _spec(sampler: dict, **train_overrides) -> dict:
+def _base(sampler: dict, **train_overrides) -> dict:
     return {
         "data": DATA,
         "sampler": sampler,
@@ -25,34 +25,40 @@ def _spec(sampler: dict, **train_overrides) -> dict:
     }
 
 
+#: D.2 — similarity measures are equivalent in practice
+SWEEP_D2 = {
+    "base": _base({"name": "algorithm2", "m": 10}),
+    "axes": {"sampler.options.measure": ["arccos", "l2", "l1"]},
+    "root_seed": 3,
+}
+
+#: D.4 — influence of N (local steps) and m (sampled clients)
+SWEEP_D4_N = {
+    "base": _base({"name": "md", "m": 10}),
+    "axes": {"train.n_local_steps": [5, 20], "sampler.name": ["md", "algorithm2"]},
+    "root_seed": 3,
+}
+SWEEP_D4_M = {
+    "base": _base({"name": "md", "m": 10}),
+    "axes": {"sampler.m": [5, 20], "sampler.name": ["md", "algorithm2"]},
+    "root_seed": 3,
+}
+
+#: D.5 — FedProx (mu = 0.1): clustered sampling still helps
+SWEEP_D5 = {
+    "base": _base({"name": "md", "m": 10}, fedprox_mu=0.1),
+    "axes": {"sampler.name": ["md", "algorithm2"]},
+    "root_seed": 3,
+}
+
+
 def main() -> None:
-    ds = build_dataset(DataSpec.from_dict(DATA))
-
-    # D.2 — similarity measures are equivalent in practice
-    for measure in ("arccos", "l2", "l1"):
-        spec = _spec({"name": "algorithm2", "m": 10, "options": {"measure": measure}})
-        t0 = time.perf_counter()
-        r = run_spec(spec, dataset=ds)
-        emit(
-            f"ablation_D2/measure={measure}",
-            (time.perf_counter() - t0) * 1e6 / ROUNDS,
-            f"loss={r['final_loss']:.4f};acc={r['final_acc']:.3f}",
-        )
-
-    # D.4 — influence of N (local steps) and m (sampled clients)
-    for n_local in (5, 20):
-        for name, key in (("md", "md"), ("algorithm2", "alg2")):
-            r = run_spec(_spec({"name": name, "m": 10}, n_local_steps=n_local), dataset=ds)
-            emit(f"ablation_D4/N={n_local}/{key}", 0.0, f"loss={r['final_loss']:.4f}")
-    for m in (5, 20):
-        for name, key in (("md", "md"), ("algorithm2", "alg2")):
-            r = run_spec(_spec({"name": name, "m": m}), dataset=ds)
-            emit(f"ablation_D4/m={m}/{key}", 0.0, f"loss={r['final_loss']:.4f}")
-
-    # D.5 — FedProx (mu = 0.1): clustered sampling still helps
-    for name, key in (("md", "md"), ("algorithm2", "alg2")):
-        r = run_spec(_spec({"name": name, "m": 10}, fedprox_mu=0.1), dataset=ds)
-        emit(f"ablation_D5/fedprox/{key}", 0.0, f"loss={r['final_loss']:.4f}")
+    # labels are also the per-sweep store keys under $BENCH_SWEEP_STORE,
+    # so the two D.4 sub-sweeps must not share one
+    run_sweep_emit(SWEEP_D2, "ablation_D2")
+    run_sweep_emit(SWEEP_D4_N, "ablation_D4_N", stats={"loss": "final_loss"})
+    run_sweep_emit(SWEEP_D4_M, "ablation_D4_m", stats={"loss": "final_loss"})
+    run_sweep_emit(SWEEP_D5, "ablation_D5_fedprox", stats={"loss": "final_loss"})
 
 
 if __name__ == "__main__":

@@ -4,7 +4,8 @@
    so long-unsampled clients return to the cold-start cluster (the paper
    clusters on arbitrarily stale similarity). Compared at γ ∈ {1.0 (paper),
    0.8, 0.5} under a small m (staleness is worst when few clients refresh
-   per round) — a one-line spec sweep over ``staleness_decay``.
+   per round) — a one-axis ``SweepSpec`` over ``staleness_decay`` through
+   the shared campaign runner.
 2. device-offloaded similarity — Algorithm 2 with the Pallas similarity
    kernel as its distance backend (interpret mode here; MXU path on TPU),
    asserting identical sampling plans to the numpy host path. The two
@@ -12,47 +13,38 @@
 """
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
-from benchmarks.common import PAPER_TRAIN, emit, run_spec
+from benchmarks.common import PAPER_TRAIN, emit, run_sweep_emit
 from repro.core import validate_plan
 from repro.fl.experiment import DataSpec, build_dataset, build_sampler
 
 DIM = 32
 ROUNDS = 12
 
-DATA = {"name": "dirichlet_labels", "options": {"alpha": 0.01, "dim": DIM, "noise": 2.5, "seed": 0}}
+DATA = {"name": "dirichlet_labels", "options": {"alpha": 0.01, "dim": DIM, "noise": 2.5}}
+
+# NOTE: the decay must be paired with a magnitude-sensitive measure —
+# arccos is scale-invariant, so uniformly shrinking stale vectors would
+# not change any angle (verified: identical runs under arccos). L2 sees
+# the decayed vectors drift toward the zero / cold-start cluster.
+SWEEP_STALENESS = {
+    "base": {
+        "data": DATA,
+        "sampler": {"name": "algorithm2", "m": 5, "options": {"measure": "l2"}},
+        "train": {"n_rounds": ROUNDS, **PAPER_TRAIN},
+    },
+    "axes": {"sampler.options.staleness_decay": [1.0, 0.8, 0.5]},
+    "root_seed": 4,
+}
 
 
 def main() -> None:
-    ds = build_dataset(DataSpec.from_dict(DATA))
-    pop = ds.population
-
-    # NOTE: the decay must be paired with a magnitude-sensitive measure —
-    # arccos is scale-invariant, so uniformly shrinking stale vectors would
-    # not change any angle (verified: identical runs under arccos). L2 sees
-    # the decayed vectors drift toward the zero / cold-start cluster.
-    for gamma in (1.0, 0.8, 0.5):
-        spec = {
-            "data": DATA,
-            "sampler": {
-                "name": "algorithm2",
-                "m": 5,
-                "options": {"staleness_decay": gamma, "measure": "l2"},
-            },
-            "train": {"n_rounds": ROUNDS, **PAPER_TRAIN},
-        }
-        t0 = time.perf_counter()
-        r = run_spec(spec, dataset=ds)
-        emit(
-            f"beyond/staleness_decay={gamma}",
-            (time.perf_counter() - t0) * 1e6 / ROUNDS,
-            f"measure=l2;loss={r['final_loss']:.4f};acc={r['final_acc']:.3f}",
-        )
+    run_sweep_emit(SWEEP_STALENESS, "beyond/staleness")
 
     # kernel-backed similarity must produce the identical plan
+    ds = build_dataset(DataSpec.from_dict(DATA))
+    pop = ds.population
     rng = np.random.default_rng(0)
     d = 128
     G = rng.normal(size=(pop.n_clients, d))

@@ -1,15 +1,23 @@
-"""Shared benchmark helpers: timed CSV rows + spec-driven FL runs."""
+"""Shared benchmark helpers: timed CSV rows + spec/sweep-driven FL runs."""
 from __future__ import annotations
 
+import contextlib
+import os
+import tempfile
 import time
-
-import numpy as np
 
 ROWS: list[tuple[str, float, str]] = []
 
 #: train-hyperparameter block shared by the paper-figure scenario matrices
-#: (the paper's N=10 local steps, B=50, lr=0.05 on the 1x50 MLP)
-PAPER_TRAIN = {"n_local_steps": 10, "batch_size": 50, "lr": 0.05, "seed": 0}
+#: (the paper's N=10 local steps, B=50, lr=0.05 on the 1x50 MLP). Seeds are
+#: NOT pinned here: the sweep layer derives per-replicate data/sampler/train
+#: seeds from SeedSequence(root_seed), so "variance" comparisons never share
+#: one stream across replicates (they *do* share streams across schemes of
+#: the same replicate — paired comparisons, as in the paper's figures).
+PAPER_TRAIN = {"n_local_steps": 10, "batch_size": 50, "lr": 0.05}
+
+#: default summary stats emitted per grid point by run_sweep_emit
+EMIT_STATS = {"loss": "final_loss", "acc": "final_acc"}
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
@@ -30,15 +38,9 @@ def timed(fn, *args, repeats: int = 3, warmup: int = 1, **kw) -> tuple[float, ob
 
 def summarize(hist, rounds: int) -> dict:
     """The figure-level summary statistics of one run's History."""
-    losses = hist.series("train_loss")
-    roll = hist.rolling("train_loss", window=min(10, rounds))
-    return {
-        "final_loss": float(roll[-1]),
-        "first_loss": float(losses[0]),
-        "final_acc": float(np.nanmax(hist.series("test_acc")[-3:])),
-        "mean_distinct_classes": float(hist.series("n_distinct_classes").mean()),
-        "mean_distinct_clients": float(hist.series("n_distinct_clients").mean()),
-    }
+    from repro.fl.sweep import summarize_history
+
+    return summarize_history(hist, rounds)
 
 
 def run_spec(spec, *, dataset=None, on_round=None) -> dict:
@@ -56,3 +58,53 @@ def run_spec(spec, *, dataset=None, on_round=None) -> dict:
     with build_experiment(spec, dataset=dataset) as srv:
         hist = srv.run(on_round=on_round)
     return summarize(hist, spec.train.n_rounds)
+
+
+def run_sweep_emit(
+    sweep, label: str, *, stats: "dict[str, str] | None" = None, workers: int = 1
+) -> list[dict]:
+    """Run a SweepSpec through the shared campaign runner; emit mean±std rows.
+
+    One ``emit`` row per grid point (``label/axis=value/...``) carrying
+    ``short=mean±std`` for each stat in ``stats`` (default loss/acc) and
+    the mean per-round wall time of the grid point's cells. The RunStore
+    is ephemeral unless ``$BENCH_SWEEP_STORE`` is set, in which case the
+    campaign is resumable and leaves its figure-ready ``cells.csv`` /
+    ``summary.csv`` behind under ``$BENCH_SWEEP_STORE/<label>``.
+    Returns the aggregated rows for derived emits (e.g. fig2's gain).
+    """
+    from repro.fl.sweep import SweepSpec, collate, run_sweep, write_collated
+
+    sweep = SweepSpec.from_dict(sweep) if isinstance(sweep, dict) else sweep
+    stats = EMIT_STATS if stats is None else stats
+    durations: dict[str, float] = {}
+    with contextlib.ExitStack() as stack:
+        if os.environ.get("BENCH_SWEEP_STORE"):
+            root = os.path.join(os.environ["BENCH_SWEEP_STORE"], label.replace("/", "_"))
+        else:
+            root = stack.enter_context(tempfile.TemporaryDirectory(prefix=f"sweep-{label.replace('/', '_')}-"))
+        # only freshly-run cells carry a real wall time; resumed (skipped)
+        # cells must not drag the emitted per-round timing toward zero
+        store = run_sweep(
+            sweep, root, workers=workers,
+            on_cell=lambda cell, status, summary, dt: (
+                durations.__setitem__(cell.cell_id, dt) if status == "ran" else None
+            ),
+        )
+        cell_rows, agg_rows = collate(store)
+        write_collated(store, rows=(cell_rows, agg_rows))
+    axis_paths = list(sweep.axes)
+    rounds = sweep.base.train.n_rounds
+    for row in agg_rows:
+        group = [r for r in cell_rows if r["grid"] == row["grid"]]
+        dts = [durations[r["cell"]] for r in group if r["cell"] in durations]
+        us = (sum(dts) / len(dts)) * 1e6 / max(rounds, 1) if dts else 0.0
+        name = "/".join(
+            [label] + [f"{p.split('.')[-1]}={row[p]}" for p in axis_paths]
+        )
+        derived = ";".join(
+            f"{short}={row[f'{stat}_mean']:.4f}±{row[f'{stat}_std']:.4f}"
+            for short, stat in stats.items()
+        )
+        emit(name, us, f"{derived};seeds={row['n_seeds']}")
+    return agg_rows

@@ -2,58 +2,62 @@
 
 MD vs Algorithm 1 vs Algorithm 2 vs 'target' oracle on the paper's
 controlled partition (each client one class, 10 clients per class,
-balanced sizes, m = 10). Reports final rolling loss, accuracy and the
-per-round class representativity — the paper's key qualitative claims:
-clustered sampling always aggregates 10 distinct clients and Algorithm 2
-approaches 'target'.
+balanced sizes, m = 10). Reports mean±std final rolling loss, accuracy
+and the per-round class representativity over N_SEEDS paired replicates —
+the paper's key qualitative claims: clustered sampling always aggregates
+10 distinct clients and Algorithm 2 approaches 'target'.
 
-The whole figure is one scenario matrix of experiment specs — adding a
-scheme to the comparison is one more dict (see repro.fl.experiment).
+The whole figure is ONE campaign: a ``SweepSpec`` whose single axis is the
+sampler section, run through the shared resumable runner
+(``repro.fl.sweep``) — per-replicate data/sampler/train seeds derive from
+``SeedSequence(root_seed)`` and are shared across the four schemes, so
+the comparison is paired. Adding a scheme is one more dict.
 """
 from __future__ import annotations
 
-import time
-
-from benchmarks.common import PAPER_TRAIN, emit, run_spec
-from repro.fl.experiment import DataSpec, build_dataset
+from benchmarks.common import PAPER_TRAIN, run_sweep_emit
 
 ROUNDS = 25
 DIM = 32
+N_SEEDS = 2
 
 DATA = {
     "name": "by_class_shards",
-    "options": {"dim": DIM, "noise": 2.5, "train_per_client": 200, "test_per_client": 30, "seed": 0},
+    "options": {"dim": DIM, "noise": 2.5, "train_per_client": 200, "test_per_client": 30},
 }
 
-SCENARIOS = {
-    "md": {"name": "md", "m": 10},
-    "algorithm1": {"name": "algorithm1", "m": 10},
-    "algorithm2": {"name": "algorithm2", "m": 10},
-    "target": {
-        "name": "target",
-        "m": 10,
-        "options": {"groups": [list(range(i * 10, (i + 1) * 10)) for i in range(10)]},
+SWEEP = {
+    "base": {
+        "data": DATA,
+        "sampler": {"name": "md", "m": 10},
+        "train": {"n_rounds": ROUNDS, **PAPER_TRAIN},
     },
+    "axes": {
+        "sampler": [
+            {"name": "md", "m": 10},
+            {"name": "algorithm1", "m": 10},
+            {"name": "algorithm2", "m": 10},
+            {
+                "name": "target",
+                "m": 10,
+                "options": {"groups": [list(range(i * 10, (i + 1) * 10)) for i in range(10)]},
+            },
+        ],
+    },
+    "n_seeds": N_SEEDS,
+    "root_seed": 1,
+}
+
+STATS = {
+    "loss": "final_loss",
+    "acc": "final_acc",
+    "classes": "mean_distinct_classes",
+    "clients": "mean_distinct_clients",
 }
 
 
 def main() -> None:
-    ds = build_dataset(DataSpec.from_dict(DATA))  # shared across the matrix
-    for name, sampler in SCENARIOS.items():
-        spec = {
-            "data": DATA,
-            "sampler": sampler,
-            "train": {"n_rounds": ROUNDS, **PAPER_TRAIN},
-        }
-        t0 = time.perf_counter()
-        res = run_spec(spec, dataset=ds)
-        us = (time.perf_counter() - t0) * 1e6 / ROUNDS
-        emit(
-            f"fig1/{name}",
-            us,
-            f"loss={res['final_loss']:.4f};acc={res['final_acc']:.3f};"
-            f"classes={res['mean_distinct_classes']:.2f};clients={res['mean_distinct_clients']:.2f}",
-        )
+    run_sweep_emit(SWEEP, "fig1", stats=STATS)
 
 
 if __name__ == "__main__":

@@ -2,37 +2,40 @@
 unbalanced 100-client profile. The paper's claim: the smaller α (more
 heterogeneous), the larger the improvement of clustered sampling over MD.
 
-The sweep is a spec matrix over α × sampler (repro.fl.experiment)."""
+The figure is ONE campaign — a ``SweepSpec`` over α × sampler with
+N_SEEDS paired replicates (``repro.fl.sweep``); the clustered gain per α
+is derived from the collated mean final losses."""
 from __future__ import annotations
 
-import time
-
-from benchmarks.common import PAPER_TRAIN, emit, run_spec
-from repro.fl.experiment import DataSpec, build_dataset
+from benchmarks.common import PAPER_TRAIN, emit, run_sweep_emit
 
 ALPHAS = (0.001, 0.01, 0.1, 10.0)
 ROUNDS = 20
 DIM = 32
+N_SEEDS = 2
 
-SAMPLER_SPECS = ({"name": "md", "m": 10}, {"name": "algorithm2", "m": 10})
+SWEEP = {
+    "base": {
+        "data": {"name": "dirichlet_labels", "options": {"alpha": 0.001, "dim": DIM, "noise": 2.5}},
+        "sampler": {"name": "md", "m": 10},
+        "train": {"n_rounds": ROUNDS, **PAPER_TRAIN},
+    },
+    "axes": {
+        "data.options.alpha": list(ALPHAS),
+        "sampler.name": ["md", "algorithm2"],
+    },
+    "n_seeds": N_SEEDS,
+    "root_seed": 2,
+}
 
 
 def main() -> None:
+    agg = run_sweep_emit(SWEEP, "fig2")
     for alpha in ALPHAS:
-        data = {"name": "dirichlet_labels", "options": {"alpha": alpha, "dim": DIM, "noise": 2.5, "seed": 0}}
-        ds = build_dataset(DataSpec.from_dict(data))
-        results = {}
-        for sampler in SAMPLER_SPECS:
-            spec = {"data": data, "sampler": sampler, "train": {"n_rounds": ROUNDS, **PAPER_TRAIN}}
-            t0 = time.perf_counter()
-            results[sampler["name"]] = r = run_spec(spec, dataset=ds)
-            us = (time.perf_counter() - t0) * 1e6 / ROUNDS
-            emit(
-                f"fig2/alpha={alpha}/{sampler['name']}",
-                us,
-                f"loss={r['final_loss']:.4f};acc={r['final_acc']:.3f}",
-            )
-        gain = results["md"]["final_loss"] - results["algorithm2"]["final_loss"]
+        rows = {
+            r["sampler.name"]: r for r in agg if r["data.options.alpha"] == str(alpha)
+        }
+        gain = rows["md"]["final_loss_mean"] - rows["algorithm2"]["final_loss_mean"]
         emit(f"fig2/alpha={alpha}/clustered_gain", 0.0, f"loss_delta={gain:.4f}")
 
 

@@ -18,6 +18,28 @@ python -m benchmarks.bench_round_engine --smoke
 python -m benchmarks.bench_engine_sharded --smoke
 python -m benchmarks.bench_async_planner --smoke
 
+echo "== tier-1: sweep smoke (2 cells x 2 seeds, then resume on the same store) =="
+SWEEP_STORE="$(mktemp -d)"
+trap 'rm -rf "$SWEEP_STORE"' EXIT
+SWEEP_JSON='{
+  "base": {"data": {"name": "by_class_shards",
+                    "options": {"n_classes": 4, "clients_per_class": 3, "dim": 8,
+                                "train_per_client": 40, "test_per_client": 8}},
+           "sampler": {"name": "md", "m": 4},
+           "train": {"n_rounds": 3, "n_local_steps": 4, "batch_size": 16, "hidden": [16]}},
+  "axes": {"sampler.name": ["md", "algorithm1"]},
+  "n_seeds": 2,
+  "root_seed": 7
+}'
+python -m benchmarks.run --sweep "$SWEEP_JSON" --store "$SWEEP_STORE"
+# re-invoking the same store must resume (all 4 cells skip, collation intact)
+python -m benchmarks.run --sweep "$SWEEP_JSON" --store "$SWEEP_STORE" \
+  | tee /dev/stderr | grep -c "status=skipped" | grep -qx 4
+test -s "$SWEEP_STORE/cells.csv" && test -s "$SWEEP_STORE/summary.csv"
+
+echo "== tier-1: registry discoverability (--list) =="
+python -m benchmarks.run --list
+
 echo "== tier-1: spec-driven experiment smoke (registry + spec parsing) =="
 python -m benchmarks.run --spec '{
   "data": {"name": "by_class_shards",

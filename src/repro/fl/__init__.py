@@ -24,6 +24,15 @@ from repro.fl.experiment import (
     build_sampler,
     register_dataset,
 )
+from repro.fl.sweep import (
+    RunStore,
+    SweepCell,
+    SweepSpec,
+    collate,
+    run_sweep,
+    summarize_history,
+    write_collated,
+)
 
 __all__ = [
     "by_class_shards",
@@ -59,4 +68,11 @@ __all__ = [
     "build_dataset",
     "build_sampler",
     "build_experiment",
+    "SweepSpec",
+    "SweepCell",
+    "RunStore",
+    "run_sweep",
+    "collate",
+    "write_collated",
+    "summarize_history",
 ]

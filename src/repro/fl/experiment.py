@@ -26,7 +26,10 @@ async planner workers are always released::
 Sweeping sampler × planner × engine × mesh is then a matrix of dicts, not
 a matrix of hand-wired constructor calls; registering a new scheme
 (``register_sampler``) or engine (``register_engine``) makes it reachable
-from every benchmark, example and CLI that speaks specs. Errors are
+from every benchmark, example and CLI that speaks specs. Whole *campaigns*
+— a grid of dotted-path overrides × ``n_seeds`` replicates with a
+resumable store and mean±std collation — live one layer up in
+:mod:`repro.fl.sweep` (:class:`~repro.fl.sweep.SweepSpec`). Errors are
 precise by construction: unknown dict keys name the spec class and the
 accepted keys, unknown registry names list what is registered, and sampler
 options are checked against the scheme's actual signature.

@@ -1,4 +1,11 @@
-"""Per-round FL run telemetry."""
+"""Per-round FL run telemetry.
+
+Serialization round-trips: ``RoundRecord.to_dict``/``from_dict`` and
+``History.to_json``/``from_json`` are exact inverses — ``agg_weights``
+survives as an optional JSON list of f64 (f64 → repr → f64 is lossless),
+so the sweep layer's :class:`~repro.fl.sweep.RunStore` can persist one
+record per JSONL line and rebuild the identical ``History`` on read.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -21,6 +28,26 @@ class RoundRecord:
     plan_version: int = 0
     plan_lag_rounds: int = 0
 
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        if self.agg_weights is not None:
+            d["agg_weights"] = np.asarray(self.agg_weights, dtype=np.float64).tolist()
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "RoundRecord":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - fields
+        if unknown:
+            raise ValueError(
+                f"RoundRecord.from_dict: unknown key(s) {sorted(unknown)}; "
+                f"accepted keys: {sorted(fields)}"
+            )
+        kw = dict(d)
+        if kw.get("agg_weights") is not None:
+            kw["agg_weights"] = np.asarray(kw["agg_weights"], dtype=np.float64)
+        return cls(**kw)
+
 
 @dataclasses.dataclass
 class History:
@@ -40,10 +67,16 @@ class History:
         kernel = np.ones(min(window, len(x))) / min(window, len(x))
         return np.convolve(x, kernel, mode="valid")
 
-    def to_json(self) -> str:
-        return json.dumps(
-            [
-                {k: v for k, v in dataclasses.asdict(r).items() if k != "agg_weights"}
-                for r in self.records
-            ]
-        )
+    def to_json(self, *, include_agg_weights: bool = True) -> str:
+        recs = [r.to_dict() for r in self.records]
+        if not include_agg_weights:
+            for d in recs:
+                d.pop("agg_weights", None)
+        return json.dumps(recs)
+
+    @classmethod
+    def from_json(cls, s: str) -> "History":
+        recs = json.loads(s)
+        if not isinstance(recs, list):
+            raise ValueError(f"History.from_json expects a JSON list, got {type(recs).__name__}")
+        return cls(records=[RoundRecord.from_dict(d) for d in recs])
