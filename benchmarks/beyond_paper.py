@@ -10,6 +10,12 @@
    kernel as its distance backend (interpret mode here; MXU path on TPU),
    asserting identical sampling plans to the numpy host path. The two
    backends differ by one spec option (``distance_fn``).
+3. client churn — the paper assumes everyone answers every round; the
+   continuous-service layer (``repro.fl.population``) relaxes that. One
+   ``SweepSpec`` axis over whole ``population`` sections compares clustered
+   sampling under a fixed fleet, Poisson arrival/departure churn, and 20%
+   mid-round dropout — how much availability-conditioned re-normalization
+   costs in final loss/accuracy at matched rounds.
 """
 from __future__ import annotations
 
@@ -38,9 +44,28 @@ SWEEP_STALENESS = {
     "root_seed": 4,
 }
 
+# churn axis: whole population sections as axis values (the sweep layer
+# treats a section-level path as a swap of the entire dict)
+SWEEP_CHURN = {
+    "base": {
+        "data": DATA,
+        "sampler": {"name": "algorithm2", "m": 5},
+        "train": {"n_rounds": ROUNDS, **PAPER_TRAIN},
+    },
+    "axes": {
+        "population": [
+            {"name": "static"},
+            {"name": "poisson", "options": {"join_rate": 0.3, "leave_rate": 0.3}},
+            {"name": "dropout", "options": {"rate": 0.2}},
+        ]
+    },
+    "root_seed": 4,
+}
+
 
 def main() -> None:
     run_sweep_emit(SWEEP_STALENESS, "beyond/staleness")
+    run_sweep_emit(SWEEP_CHURN, "beyond/churn")
 
     # kernel-backed similarity must produce the identical plan
     ds = build_dataset(DataSpec.from_dict(DATA))

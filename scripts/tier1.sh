@@ -17,6 +17,7 @@ python -m benchmarks.bench_sampler_cost --smoke
 python -m benchmarks.bench_round_engine --smoke
 python -m benchmarks.bench_engine_sharded --smoke
 python -m benchmarks.bench_async_planner --smoke
+python -m benchmarks.bench_service_churn --smoke
 
 echo "== tier-1: sweep smoke (2 cells x 2 seeds, then resume on the same store) =="
 SWEEP_STORE="$(mktemp -d)"
@@ -49,5 +50,41 @@ python -m benchmarks.run --spec '{
   "planner": {"mode": "async", "rebuild_every": 2},
   "train": {"n_rounds": 3, "n_local_steps": 4, "batch_size": 16, "hidden": [16]}
 }'
+
+echo "== tier-1: continuous-service smoke (SIGTERM mid-campaign, then resume) =="
+SVC_DIR="$(mktemp -d)"
+trap 'rm -rf "$SWEEP_STORE" "$SVC_DIR"' EXIT
+SVC_SPEC='{
+  "data": {"name": "by_class_shards",
+           "options": {"n_classes": 4, "clients_per_class": 2, "dim": 8,
+                        "train_per_client": 40, "test_per_client": 8, "seed": 0}},
+  "sampler": {"name": "algorithm1", "m": 4},
+  "train": {"n_rounds": 30, "n_local_steps": 3, "batch_size": 10,
+            "hidden": [16], "checkpoint_every": 1},
+  "population": {"name": "dropout", "options": {"rate": 0.2}}
+}'
+python -m repro.launch.fl_service --spec "$SVC_SPEC" \
+  --checkpoint "$SVC_DIR/svc.npz" --history "$SVC_DIR/history.json" \
+  --throttle 0.2 > "$SVC_DIR/run1.log" 2>&1 &
+SVC_PID=$!
+sleep 4  # throttled rounds: the campaign is guaranteed still mid-flight
+kill -TERM "$SVC_PID"
+wait "$SVC_PID"  # SIGTERM must be a clean exit (checkpoint written, rc 0)
+grep -q "stop requested" "$SVC_DIR/run1.log"
+# NOTE: log to a file and grep afterwards — piping the live process into
+# `grep -q` would close its stdout on first match and cut the campaign short.
+python -m repro.launch.fl_service --spec "$SVC_SPEC" \
+  --checkpoint "$SVC_DIR/svc.npz" --history "$SVC_DIR/history.json" --resume \
+  > "$SVC_DIR/run2.log" 2>&1
+grep -q "resuming at round" "$SVC_DIR/run2.log"
+# the resumed history must extend the checkpointed cursor to all 30 rounds,
+# contiguously from 0 — no gap and no replay at the kill point
+python - "$SVC_DIR/history.json" <<'EOF'
+import json, sys
+recs = json.load(open(sys.argv[1]))
+rounds = [r["round"] for r in recs]
+assert rounds == list(range(30)), f"history not contiguous 0..29: {rounds}"
+assert any(r["round_status"] == "degraded" for r in recs), "dropout never degraded a round"
+EOF
 
 echo "tier-1 OK"

@@ -51,22 +51,44 @@ def save_checkpoint(path: str, tree: Any, *, step: int = 0, extra: dict | None =
             os.unlink(tmp)
 
 
-def restore_checkpoint(path: str, reference: Any) -> tuple[Any, int]:
-    """Restore arrays into the structure of ``reference``; returns (tree, step)."""
+def restore_checkpoint(path: str, reference: Any) -> tuple[Any, int, dict]:
+    """Restore arrays into the structure of ``reference``.
+
+    Returns ``(tree, step, extra)`` — ``extra`` is the JSON side-channel
+    ``save_checkpoint`` was given (rng states, history cursors, …; ``{}``
+    when none was saved). The reference is authoritative for structure AND
+    residence: a leaf that is a host ``np.ndarray`` in ``reference`` is
+    restored as one (dtype-exact — f64 sampler state must not round-trip
+    through jax's default-f32 device path); everything else comes back as a
+    device array cast to the reference dtype. Missing leaves, shape
+    mismatches and leaves present in the ``.npz`` but absent from the
+    reference are all errors — a silently-ignored leaf is state that a
+    resumed run would quietly lose.
+    """
     with np.load(path) as data:
         meta = json.loads(bytes(data["__meta__"]).decode())
         flat = {k: data[k] for k in data.files if k != "__meta__"}
-    leaves_ref, treedef = jax.tree_util.tree_flatten_with_path(reference)
-    leaves = []
+    leaves_ref, _ = jax.tree_util.tree_flatten_with_path(reference)
+    leaves, seen = [], set()
     for path_keys, ref_leaf in leaves_ref:
         key = "/".join(_path_str(p) for p in path_keys)
         if key not in flat:
             raise KeyError(f"checkpoint missing leaf {key!r}")
+        seen.add(key)
         arr = flat[key]
         if arr.shape != ref_leaf.shape:
             raise ValueError(f"{key}: checkpoint shape {arr.shape} != expected {ref_leaf.shape}")
-        leaves.append(jax.numpy.asarray(arr).astype(ref_leaf.dtype))
+        if isinstance(ref_leaf, np.ndarray):
+            leaves.append(np.asarray(arr, dtype=ref_leaf.dtype))
+        else:
+            leaves.append(jax.numpy.asarray(arr).astype(np.asarray(ref_leaf).dtype))
+    unknown = set(flat) - seen
+    if unknown:
+        raise KeyError(
+            f"checkpoint holds leaf(s) {sorted(unknown)} that the reference "
+            "tree does not — refusing to silently drop state on restore"
+        )
     tree = jax.tree_util.tree_unflatten(
         jax.tree_util.tree_structure(reference), leaves
     )
-    return tree, int(meta["step"])
+    return tree, int(meta["step"]), dict(meta.get("extra") or {})

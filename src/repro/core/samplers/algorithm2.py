@@ -215,7 +215,42 @@ class Algorithm2Sampler(ClusteredSampler):
     def close(self) -> None:
         self._service.close()
 
-    def sample(self, round_idx: int) -> SampleResult:
+    # -- checkpointable state ------------------------------------------------
+    def prepare_state(self) -> None:
+        """Quiesce the planner so the checkpoint is the sync fixed point.
+
+        With ``planner="async"`` an in-flight rebuild cannot ride in a
+        checkpoint; flushing first makes the exported (G, plan, counters)
+        bundle self-consistent — a restored server continues exactly as a
+        sync-planned one would from this state.
+        """
+        self.flush_plan()
+
+    def state_arrays(self) -> dict:
+        arrays = super().state_arrays()
+        arrays["store_G"] = self._store.asnumpy()
+        return arrays
+
+    def state_meta(self) -> dict:
+        meta = super().state_meta()
+        version, _ = self._service.telemetry()
+        meta["plan_version"] = version
+        meta["obs_seen"] = self._service.observations_seen()
+        return meta
+
+    def load_state(self, meta: dict, arrays: dict) -> None:
+        super().load_state(meta, arrays)  # rng + the exact live plan
+        self._store.load(arrays["store_G"])
+        from repro.fl.planner import VersionedPlan
+
+        self._service.restore(
+            VersionedPlan(self._plan, int(meta["plan_version"])),
+            obs_seen=int(meta["obs_seen"]),
+        )
+
+    def sample(
+        self, round_idx: int, available: Optional[np.ndarray] = None
+    ) -> SampleResult:
         del round_idx
         self._swap_freshest()  # round boundary: adopt the freshest plan
-        return self._draw_from_plan(self._plan)
+        return self._draw_from_plan(self._plan, available)

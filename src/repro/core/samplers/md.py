@@ -6,6 +6,8 @@ weight 1/m per draw (eq. 4). Special case of clustered sampling with
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import numpy as np
 
 from repro.core.samplers.base import ClientSampler
@@ -24,6 +26,10 @@ class MDSampler(ClientSampler):
     def plan(self) -> SamplingPlan:
         return self._plan
 
-    def sample(self, round_idx: int) -> SampleResult:
+    def sample(
+        self, round_idx: int, available: Optional[np.ndarray] = None
+    ) -> SampleResult:
         del round_idx
-        return self._draw_from_plan(self._plan)
+        # under an availability mask every row conditions to p·a / Σ p_j a_j
+        # — MD sampling restricted to the available set, still unbiased there
+        return self._draw_from_plan(self._plan, available)

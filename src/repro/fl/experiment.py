@@ -3,15 +3,16 @@
 The paper's pitch is that clustered sampling drops into standard FL loops;
 this module makes that literal. An :class:`ExperimentSpec` names everything
 a run needs — the dataset partition, the client-selection scheme, the plan
-rebuild cadence, the round engine, and the train hyperparameters — as a
-JSON-round-trippable dict of five sections::
+rebuild cadence, the round engine, the train hyperparameters, and the
+client-churn scenario — as a JSON-round-trippable dict of six sections::
 
     {
-      "data":    {"name": "by_class_shards", "options": {"dim": 32}},
-      "sampler": {"name": "algorithm2", "m": 10},
-      "planner": {"mode": "async", "rebuild_every": 2},
-      "engine":  {"name": "batched"},
-      "train":   {"n_rounds": 25, "lr": 0.05}
+      "data":       {"name": "by_class_shards", "options": {"dim": 32}},
+      "sampler":    {"name": "algorithm2", "m": 10},
+      "planner":    {"mode": "async", "rebuild_every": 2},
+      "engine":     {"name": "batched"},
+      "train":      {"n_rounds": 25, "lr": 0.05},
+      "population": {"name": "poisson", "options": {"leave_rate": 0.2}}
     }
 
 ``build_experiment(spec)`` resolves every name through a registry
@@ -200,6 +201,35 @@ class EngineSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class PopulationSpec:
+    """Which client-churn scenario the service runs under (a
+    :data:`~repro.fl.population.POPULATIONS` name).
+
+    The default — ``static`` with no options — is the paper's fixed
+    population; ``build_experiment`` then attaches *no* population process
+    at all, keeping batch experiments on the exact pre-service code path.
+    ``options`` passes scenario knobs through (``join_rate``, ``leave_rate``,
+    ``rate``, ``period``, ``duty``, ``drop_rate``, ``straggle_rate``, …),
+    checked against the process signature at build time.
+    """
+
+    name: str = "static"
+    seed: int = 0
+    options: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def is_default(self) -> bool:
+        return self.name == "static" and not self.options
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "PopulationSpec":
+        return _from_dict(cls, d)
+
+    def to_dict(self) -> dict:
+        return {"name": self.name, "seed": self.seed, "options": dict(self.options)}
+
+
+@dataclasses.dataclass(frozen=True)
 class TrainSpec:
     """Round/optimization hyperparameters + the paper's MLP shape.
 
@@ -218,6 +248,11 @@ class TrainSpec:
     hidden: tuple = (50,)
     n_classes: Optional[int] = None
     model_seed: int = 1
+    # service cadence: checkpoint the full ServerState every k completed
+    # rounds (0 = batch mode, never checkpoint). The checkpoint *path* is a
+    # runtime concern — pass it to build_experiment / the fl_service driver,
+    # never bake it into a spec (it would poison sweep cell identity).
+    checkpoint_every: int = 0
 
     def __post_init__(self):
         object.__setattr__(self, "hidden", tuple(self.hidden))
@@ -241,6 +276,7 @@ class ExperimentSpec:
     planner: PlannerSpec = PlannerSpec()
     engine: EngineSpec = EngineSpec()
     train: TrainSpec = TrainSpec()
+    population: PopulationSpec = PopulationSpec()
 
     _NESTED = {
         "data": DataSpec,
@@ -248,6 +284,7 @@ class ExperimentSpec:
         "planner": PlannerSpec,
         "engine": EngineSpec,
         "train": TrainSpec,
+        "population": PopulationSpec,
     }
 
     @classmethod
@@ -377,6 +414,7 @@ def build_experiment(
     dataset: Optional[FederatedDataset] = None,
     loss_fn: Optional[Callable] = None,
     acc_fn: Optional[Callable] = None,
+    checkpoint_path: Optional[str] = None,
 ) -> FederatedServer:
     """Build the lifecycle-safe server an :class:`ExperimentSpec` describes.
 
@@ -385,9 +423,12 @@ def build_experiment(
     sampler's background resources — run it under ``with`` (or call
     ``close()``) so async planner workers never leak. ``loss_fn``/``acc_fn``
     override the defaults (FedProx is selected automatically when
-    ``train.fedprox_mu > 0``).
+    ``train.fedprox_mu > 0``). ``checkpoint_path`` is where the service
+    cadence (``train.checkpoint_every``) writes ServerState bundles — a
+    runtime knob, deliberately not part of the spec.
     """
     from repro.fl.aggregation import flatten_params
+    from repro.fl.population import build_population
     from repro.models.simple import accuracy, classification_loss, fedprox_loss, init_mlp
     from repro.optim import sgd
 
@@ -416,11 +457,21 @@ def build_experiment(
         engine=spec.engine.name,
         max_staged_bytes=spec.engine.max_staged_bytes,
         mesh_spec=spec.engine.mesh_spec,
+        checkpoint_every=tr.checkpoint_every,
+        checkpoint_path=checkpoint_path,
+    )
+    # the default spec attaches no process at all: batch experiments stay on
+    # the exact fixed-population code path (n_available=-1 telemetry included)
+    pop = (
+        None
+        if spec.population.is_default
+        else build_population(spec.population, ds.population.n_clients)
     )
     lf = loss_fn if loss_fn is not None else (fedprox_loss if tr.fedprox_mu else classification_loss)
     af = acc_fn if acc_fn is not None else accuracy
     return FederatedServer(
-        ds, sampler, params, sgd(tr.lr, tr.momentum), cfg, loss_fn=lf, acc_fn=af
+        ds, sampler, params, sgd(tr.lr, tr.momentum), cfg, loss_fn=lf, acc_fn=af,
+        population=pop,
     )
 
 
@@ -430,6 +481,7 @@ __all__ = [
     "PlannerSpec",
     "EngineSpec",
     "TrainSpec",
+    "PopulationSpec",
     "ExperimentSpec",
     "DATASETS",
     "register_dataset",

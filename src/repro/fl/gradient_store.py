@@ -103,6 +103,16 @@ class GradientStore:
         """The current G — an immutable device array (or a numpy copy)."""
         return self._G if self._jnp is not None else self._G.copy()
 
+    def load(self, G) -> None:
+        """Replace the buffer with a checkpointed (n_clients, d) f32 state."""
+        G = np.asarray(G, np.float32)
+        if G.shape != (self.n_clients, self.update_dim):
+            raise ValueError(
+                f"checkpointed G shape {G.shape} != "
+                f"({self.n_clients}, {self.update_dim})"
+            )
+        self._G = self._jnp.asarray(G) if self._jnp is not None else G.copy()
+
     def asnumpy(self) -> np.ndarray:
         """Host f32 copy, for inspection and host-side reference builds."""
         return np.asarray(self._G)

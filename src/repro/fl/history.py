@@ -27,6 +27,16 @@ class RoundRecord:
     # >= 0 when re-clustering overlaps client local work, see fl.planner)
     plan_version: int = 0
     plan_lag_rounds: int = 0
+    # continuous-service telemetry (see repro.fl.population): how many
+    # clients the availability mask admitted this round (-1 = no population
+    # process, the paper's fixed-n behaviour), how many realized
+    # participants vanished mid-round / straggled past the deadline, and
+    # the round's resolution: "ok" (everyone reported), "degraded" (>= 1
+    # drop, the survivors' zero-weight-slot aggregation went through) or
+    # "empty" (a skipped EmptyRound under a service driver's skip policy)
+    n_available: int = -1
+    n_dropped: int = 0
+    round_status: str = "ok"
 
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)

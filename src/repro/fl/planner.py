@@ -172,6 +172,35 @@ class PlanService:
         with self._cond:
             return self._current.version, self._obs_seen - self._current.version
 
+    def observations_seen(self) -> int:
+        """Total observations recorded (the rebuild-cadence counter)."""
+        with self._cond:
+            return self._obs_seen
+
+    def restore(self, plan: VersionedPlan, *, obs_seen: int) -> None:
+        """Reinstate a checkpointed (plan, observation-counter) state.
+
+        The checkpoint/resume half of the continuous-service path: the
+        sampler was quiesced (flushed) before its state was exported, so
+        restoring requires no rebuild to be pending or in flight — the
+        service refuses otherwise rather than racing a stale worker build
+        against the restored plan.
+        """
+        with self._cond:
+            if self._pending is not None or self._building:
+                raise RuntimeError(
+                    "cannot restore a PlanService with a rebuild pending or "
+                    "in flight; flush() first"
+                )
+            if obs_seen < plan.version:
+                raise ValueError(
+                    f"obs_seen={obs_seen} < plan version {plan.version}: a plan "
+                    "cannot incorporate observations that never happened"
+                )
+            self._current = plan
+            self._completed = None
+            self._obs_seen = int(obs_seen)
+
     def flush(self, timeout: Optional[float] = None) -> None:
         """Block until no rebuild is pending or in flight.
 

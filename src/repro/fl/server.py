@@ -20,10 +20,31 @@ Two execution engines (``FLConfig.engine``):
   * ``"compat"`` — the original per-client Python loop, kept as the
     numerics reference; ``tests/test_round_engine.py`` pins the two paths
     together to fp32 tolerance.
+
+Continuous service (the churn-tolerant path): a
+:class:`~repro.fl.population.PopulationProcess` turns the fixed-n batch
+loop into a long-running service. Each round runs as named phases —
+
+  draw ← availability mask → local work → drop resolution → aggregate
+  → observe
+
+— where the sampler conditions its draw on the round's availability mask
+(re-normalized urns, unbiased over the available set), a client that
+vanishes mid-round becomes a zero-weight slot in the engine's padded slot
+axis with its eq. 3 mass falling back on the current global model, and
+``EmptyRoundError`` fires only when *all* realized mass is gone. Crash
+tolerance: :meth:`FederatedServer.checkpoint` bundles the full
+``ServerState`` (params + server/sampler rng bit-generator state + plan
+matrices + gradient store + history cursor) through :mod:`repro.checkpoint`
+on a ``checkpoint_every`` cadence, and :meth:`FederatedServer.resume`
+reconstructs it so a killed service continues **bit-identically** to an
+uninterrupted run (pinned in ``tests/test_service_resume.py``; for
+``planner="async"`` the checkpoint first forces the sync fixed point).
 """
 from __future__ import annotations
 
 import dataclasses
+import json
 import warnings
 from typing import Callable, Optional
 
@@ -36,6 +57,7 @@ from repro.fl.aggregation import aggregate_round, flatten_params
 from repro.fl.client import draw_batch_indices, local_update
 from repro.fl.engine import ENGINES, staged_bytes
 from repro.fl.history import History, RoundRecord
+from repro.fl.population import PopulationProcess
 from repro.launch.mesh import resolve_fl_mesh
 from repro.models.simple import accuracy, classification_loss
 from repro.optim.base import Optimizer
@@ -59,6 +81,11 @@ class FLConfig:
     # mesh shapes, or a jax.sharding.Mesh. See repro.launch.mesh.
     # resolve_fl_mesh and the engine module docstring. Ignored by "compat".
     mesh_spec: "str | tuple[int, int] | None" = None
+    # Crash tolerance: every `checkpoint_every` completed rounds (and on a
+    # service stop request) the full ServerState bundle is written to
+    # `checkpoint_path` through repro.checkpoint. 0 / None disables.
+    checkpoint_every: int = 0
+    checkpoint_path: Optional[str] = None
 
 
 class EmptyRoundError(ValueError):
@@ -76,6 +103,7 @@ class FederatedServer:
         config: FLConfig,
         loss_fn: Callable = classification_loss,
         acc_fn: Callable = accuracy,
+        population: Optional[PopulationProcess] = None,
     ):
         engine_factory = ENGINES.get(config.engine)  # precise unknown-name error
         self.dataset = dataset
@@ -85,6 +113,7 @@ class FederatedServer:
         self.cfg = config
         self.loss_fn = loss_fn
         self.acc_fn = acc_fn
+        self.population = population
         self._rng = np.random.default_rng(config.seed)
         self.history = History()
         self._x_test, self._y_test = dataset.global_test()
@@ -110,7 +139,13 @@ class FederatedServer:
                     stacklevel=2,
                 )
                 engine_factory = ENGINES.get("compat")
+                mesh = None  # the compat loop never shards; a stale mesh here
+                # would be handed to the factory and pin devices for nothing
         self._engine = engine_factory(dataset, sampler.m, config, mesh)
+        # service cursor: the next round to run. run()/resume() maintain it so
+        # a restored server continues exactly where the checkpoint left off.
+        self._start_round = 0
+        self._round_cursor = 0
         self._closed = False
 
     # ------------------------------------------------------------------
@@ -140,9 +175,39 @@ class FederatedServer:
         new_params = aggregate_round(self.params, client_models, weights, stale_weight)
         return new_params, np.stack(updates_flat), np.asarray(losses)
 
-    def run_round(self, t: int) -> RoundRecord:
-        cfg = self.cfg
-        result = self.sampler.sample(t)
+    # -- round phases --------------------------------------------------------
+    # run_round = availability → draw → drop resolution → local work +
+    # aggregate → observe. The phases are separate methods so the continuous
+    # service's failure points are named and individually testable. Drop
+    # resolution happens *before* engine dispatch because the engine fuses
+    # local work and aggregation into one jitted step: a dropped client still
+    # occupies its padded slot (stable shapes, stable rng stream) but its
+    # aggregation weight is zeroed and its mass falls back on the current
+    # global model (eq. 3's stale term) — exactly "the device computed, the
+    # result never arrived".
+
+    def _phase_availability(self, t: int) -> tuple[Optional[np.ndarray], int]:
+        """(mask, n_available); (None, -1) without a population process."""
+        if self.population is None:
+            return None, -1
+        mask = self.population.available_mask(t)
+        n_avail = int(mask.sum())
+        if n_avail == 0:
+            raise EmptyRoundError(
+                f"round {t}: availability mask admits zero of "
+                f"{self.population.n_clients} clients — nobody can be drawn"
+            )
+        return mask, n_avail
+
+    def _phase_draw(self, t: int, available: Optional[np.ndarray]):
+        """Sampler draw conditioned on availability; fails on empty draws."""
+        # no mask → the legacy one-argument call, so custom samplers written
+        # before availability conditioning keep working untouched
+        result = (
+            self.sampler.sample(t)
+            if available is None
+            else self.sampler.sample(t, available)
+        )
         # sample() is the round boundary where planner-backed samplers swap
         # in the freshest completed plan — capture what this round drew from
         plan_version, plan_lag = self.sampler.plan_telemetry()
@@ -150,8 +215,9 @@ class FederatedServer:
         if distinct.size == 0:
             raise EmptyRoundError(
                 f"round {t}: sampler {type(self.sampler).__name__} returned zero "
-                "distinct clients — the plan has no mass anywhere; nothing to "
-                "train or aggregate"
+                "distinct clients — the plan has no mass anywhere"
+                + (" on the available set" if available is not None else "")
+                + "; nothing to train or aggregate"
             )
         weights = result.agg_weights[distinct]
         if weights.sum() <= 0:
@@ -160,59 +226,229 @@ class FederatedServer:
                 "distinct clients sum to zero — aggregating (and averaging the "
                 "round loss) over them is undefined"
             )
+        return result, distinct, weights, plan_version, plan_lag
 
+    def _phase_drop_resolution(
+        self, t: int, distinct: np.ndarray, weights: np.ndarray, stale_weight: float
+    ) -> tuple[np.ndarray, float, np.ndarray]:
+        """Zero dropped participants' weights; their mass goes stale.
+
+        Returns ``(weights, stale_weight, dropped)`` — ``dropped`` is the
+        boolean mask over ``distinct``. Raises :class:`EmptyRoundError` when
+        every realized participant dropped (all realized mass is gone).
+        """
+        if self.population is None:
+            return weights, stale_weight, np.zeros(distinct.shape, dtype=bool)
+        dropped = self.population.dropout_mask(t, distinct)
+        if not dropped.any():
+            return weights, stale_weight, dropped
+        live = weights[~dropped].sum()
+        if live <= 0:
+            raise EmptyRoundError(
+                f"round {t}: all {distinct.size} realized participants dropped "
+                "mid-round (or the survivors carry zero weight) — every bit of "
+                "realized aggregation mass is gone; nothing arrived to aggregate"
+            )
+        # the aggregation is a plain weighted sum (no re-normalization), so a
+        # dropped client's ω_i must land somewhere: it falls back on the
+        # current global model, the same eq. 3 stale term uniform sampling uses
+        stale_weight = float(stale_weight + weights[dropped].sum())
+        weights = np.where(dropped, 0.0, weights)
+        return weights, stale_weight, dropped
+
+    def _phase_local_work(self, distinct, weights, stale_weight):
+        """Local training + aggregation — one fused engine dispatch."""
         if self._engine is not None:
-            self.params, updates_flat, losses = self._engine.run_round(
+            return self._engine.run_round(
                 self.params,
                 distinct,
                 weights,
-                result.stale_weight,
+                stale_weight,
                 self._rng,
                 self.loss_fn,
                 self.opt,
-                cfg.fedprox_mu,
+                self.cfg.fedprox_mu,
             )
-        else:
-            self.params, updates_flat, losses = self._round_compat(
-                distinct, weights, result.stale_weight
-            )
+        return self._round_compat(distinct, weights, stale_weight)
 
-        # feed representative gradients back (Algorithm 2's input)
-        self.sampler.observe_updates(distinct, updates_flat)
+    def run_round(self, t: int) -> RoundRecord:
+        cfg = self.cfg
+        available, n_available = self._phase_availability(t)
+        result, distinct, weights, plan_version, plan_lag = self._phase_draw(
+            t, available
+        )
+        weights, stale_weight, dropped = self._phase_drop_resolution(
+            t, distinct, weights, result.stale_weight
+        )
+        n_dropped = int(dropped.sum())
+
+        self.params, updates_flat, losses = self._phase_local_work(
+            distinct, weights, stale_weight
+        )
+
+        # observe: feed representative gradients back (Algorithm 2's input) —
+        # survivors only; a dropped client's update never reached the server,
+        # so it must not refresh the similarity state either
+        if n_dropped:
+            keep = ~dropped
+            self.sampler.observe_updates(distinct[keep], updates_flat[np.asarray(keep)])
+            contributing = distinct[keep]
+        else:
+            self.sampler.observe_updates(distinct, updates_flat)
+            contributing = distinct
 
         classes = np.unique(
-            np.concatenate([self._client_classes[int(c)] for c in distinct])
+            np.concatenate([self._client_classes[int(c)] for c in contributing])
         )
         test_acc = (
             float(self.acc_fn(self.params, jnp.asarray(self._x_test), jnp.asarray(self._y_test)))
             if (t % cfg.eval_every == 0)
             else float("nan")
         )
+        agg_weights = result.agg_weights
+        if n_dropped:
+            agg_weights = np.array(agg_weights, dtype=np.float64, copy=True)
+            agg_weights[distinct[dropped]] = 0.0
         rec = RoundRecord(
             round=t,
+            # dropped participants carry zero weight, so the round loss
+            # averages over survivors only
             train_loss=float(np.average(losses, weights=weights)),
             test_acc=test_acc,
             n_distinct_clients=len(distinct),
             n_distinct_classes=len(classes),
-            agg_weights=result.agg_weights,
+            agg_weights=agg_weights,
             plan_version=plan_version,
             plan_lag_rounds=plan_lag,
+            n_available=n_available,
+            n_dropped=n_dropped,
+            round_status="degraded" if n_dropped else "ok",
         )
         self.history.append(rec)
+        self._round_cursor = t + 1
         return rec
 
-    def run(self, on_round: Optional[Callable[[RoundRecord], None]] = None) -> History:
-        """Run all configured rounds; returns the full :class:`History`.
+    def run(
+        self,
+        on_round: Optional[Callable[[RoundRecord], None]] = None,
+        *,
+        should_stop: Optional[Callable[[], bool]] = None,
+        skip_empty: bool = False,
+    ) -> History:
+        """Run rounds ``[start, n_rounds)``; returns the full :class:`History`.
 
-        ``on_round`` is the streaming telemetry hook: called with each
-        :class:`RoundRecord` as it lands, so benchmarks/examples consume
-        records as the run progresses instead of re-implementing collection.
+        ``start`` is 0 for a fresh server and the checkpointed cursor after
+        :meth:`resume`. ``on_round`` is the streaming telemetry hook: called
+        with each :class:`RoundRecord` as it lands, so benchmarks/examples
+        consume records as the run progresses instead of re-implementing
+        collection.
+
+        Service semantics: with ``FLConfig.checkpoint_every > 0`` (and a
+        ``checkpoint_path``) the full server state is checkpointed on that
+        cadence of completed rounds. ``should_stop`` is polled after each
+        round — a SIGTERM-style stop flag; when it trips, a final checkpoint
+        is written and the loop exits cleanly. ``skip_empty=True`` converts
+        :class:`EmptyRoundError` rounds (everyone offline / everyone dropped)
+        into placeholder ``round_status="empty"`` records instead of raising
+        — a long-running service rides out a dead fleet; a batch experiment
+        should still fail loudly.
         """
-        for t in range(self.cfg.n_rounds):
-            rec = self.run_round(t)
+        cfg = self.cfg
+        every = int(cfg.checkpoint_every or 0)
+        for t in range(self._start_round, cfg.n_rounds):
+            try:
+                rec = self.run_round(t)
+            except EmptyRoundError:
+                if not skip_empty:
+                    raise
+                n_avail = (
+                    int(self.population.available_mask(t).sum())
+                    if self.population is not None
+                    else -1
+                )
+                rec = RoundRecord(
+                    round=t,
+                    train_loss=float("nan"),
+                    test_acc=float("nan"),
+                    n_distinct_clients=0,
+                    n_distinct_classes=0,
+                    n_available=n_avail,
+                    round_status="empty",
+                )
+                self.history.append(rec)
+                self._round_cursor = t + 1
             if on_round is not None:
                 on_round(rec)
+            if every and cfg.checkpoint_path and (t + 1) % every == 0:
+                self.checkpoint()
+            if should_stop is not None and should_stop():
+                if cfg.checkpoint_path:
+                    self.checkpoint()
+                break
         return self.history
+
+    # -- crash tolerance -----------------------------------------------------
+    # ServerState = params + server rng + sampler state (rng, plan matrices,
+    # gradient store, plan version/history cursor) + round history. Arrays
+    # ride in the checkpoint's .npz pytree; JSON-shaped state (rng
+    # bit-generator dicts, the history records) rides in its `extra`
+    # side-channel. The population process is deliberately absent: its masks
+    # are pure functions of (seed, t), so a resumed server replays the
+    # identical availability/dropout trajectory for free.
+
+    def _state_tree(self) -> dict:
+        return {"params": self.params, "sampler": self.sampler.state_arrays()}
+
+    def checkpoint(self, path: Optional[str] = None) -> str:
+        """Write the full ServerState bundle; returns the path written.
+
+        ``path`` defaults to ``FLConfig.checkpoint_path``. The sampler is
+        quiesced first (:meth:`ClientSampler.prepare_state` — async planners
+        flush their in-flight rebuild to the sync fixed point), so the
+        bundle is always a consistent cut.
+        """
+        from repro.checkpoint import save_checkpoint
+
+        path = path or self.cfg.checkpoint_path
+        if not path:
+            raise ValueError(
+                "no checkpoint path: pass one or set FLConfig.checkpoint_path"
+            )
+        self.sampler.prepare_state()
+        extra = {
+            "server_rng": self._rng.bit_generator.state,
+            "sampler": self.sampler.state_meta(),
+            "history": json.loads(self.history.to_json()),
+        }
+        save_checkpoint(path, self._state_tree(), step=self._round_cursor, extra=extra)
+        return path
+
+    def resume(self, path: Optional[str] = None) -> int:
+        """Reconstruct mid-campaign state from a :meth:`checkpoint` bundle.
+
+        Restores params, server rng, the sampler's full state and the round
+        history, and positions :meth:`run` at the checkpointed cursor.
+        Returns the round the server will run next. For deterministic
+        (sync/static-plan) samplers the continuation is bit-identical to the
+        uninterrupted run; async planners restore the exact sync fixed point
+        the checkpoint captured, though their rebuild timing stays a race
+        (plan_lag telemetry may differ, as it does between any two async
+        runs). Both pinned in ``tests/test_service_resume.py``.
+        """
+        from repro.checkpoint import restore_checkpoint
+
+        path = path or self.cfg.checkpoint_path
+        if not path:
+            raise ValueError(
+                "no checkpoint path: pass one or set FLConfig.checkpoint_path"
+            )
+        tree, step, extra = restore_checkpoint(path, self._state_tree())
+        self.params = tree["params"]
+        self._rng.bit_generator.state = extra["server_rng"]
+        self.sampler.load_state(extra["sampler"], tree["sampler"])
+        self.history = History.from_json(json.dumps(extra["history"]))
+        self._start_round = self._round_cursor = int(step)
+        return int(step)
 
     # -- lifecycle ----------------------------------------------------------
     # The server owns the sampler's background resources (async planner

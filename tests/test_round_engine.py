@@ -220,6 +220,30 @@ def test_staging_budget_falls_back_to_compat(dataset):
     assert np.isfinite(rec.train_loss)
 
 
+def test_staging_budget_fallback_drops_stale_mesh(dataset, monkeypatch):
+    """The over-budget fallback must hand the compat factory mesh=None: the
+    mesh resolved for the batched engine is dead weight once the fallback
+    triggers (it would pin devices for an engine that never shards)."""
+    from repro.fl.engine import ENGINES
+
+    seen = {}
+
+    def spy_compat(ds, m, config, mesh):
+        seen["mesh"] = mesh
+        return None
+
+    monkeypatch.setitem(ENGINES._entries, "compat", spy_compat)
+    params = init_mlp((16, 32, 10), seed=1)
+    cfg = FLConfig(
+        n_rounds=1, n_local_steps=2, batch_size=8,
+        max_staged_bytes=1, mesh_spec="auto",
+    )
+    with pytest.warns(UserWarning, match="falling back to the compat loop"):
+        srv = FederatedServer(dataset, MDSampler(dataset.population, 10), params, sgd(0.1), cfg)
+    assert seen["mesh"] is None
+    assert srv._engine is None
+
+
 def test_unknown_engine_rejected(dataset):
     params = init_mlp((16, 32, 10), seed=1)
     cfg = FLConfig(n_rounds=1, engine="turbo")

@@ -1,0 +1,185 @@
+"""Crash-safe ServerState: kill/resume must be bit-identical to never dying.
+
+The contract under test: ``FederatedServer.checkpoint`` captures everything
+the rest of the campaign depends on — params, server rng, sampler rng, plan
+matrices, the gradient store, plan version/observation cursor, and the
+round history — so a server rebuilt from the spec plus the checkpoint
+produces byte-for-byte the History of the uninterrupted run. Populations
+are deliberately absent from the bundle (masks are pure in (seed, t)), so
+the checks run under churn + dropout to prove the replay holds.
+"""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+from repro.fl import ExperimentSpec, build_experiment
+
+SPEC = {
+    "data": {
+        "name": "by_class_shards",
+        "options": {
+            "clients_per_class": 2, "train_per_client": 40,
+            "dim": 8, "n_classes": 4, "seed": 0,
+        },
+    },
+    "sampler": {"name": "algorithm2", "m": 4, "seed": 3},
+    "train": {"n_rounds": 8, "n_local_steps": 3, "batch_size": 10, "seed": 1},
+    "population": {
+        "name": "poisson",
+        "options": {"join_rate": 0.4, "leave_rate": 0.4, "drop_rate": 0.15},
+    },
+}
+
+
+def _spec(**over) -> ExperimentSpec:
+    d = {**SPEC, **over}
+    return ExperimentSpec.from_dict(d)
+
+
+def _run_full(spec):
+    with build_experiment(spec) as srv:
+        return srv.run()
+
+
+def _run_interrupted(spec, path, kill_at):
+    with build_experiment(spec, checkpoint_path=path) as srv:
+        for t in range(kill_at):
+            srv.run_round(t)
+        srv.checkpoint()
+    # the process "dies" here; a fresh build restores from the bundle
+    with build_experiment(spec, checkpoint_path=path) as srv:
+        assert srv.resume() == kill_at
+        return srv.run()
+
+
+@pytest.mark.parametrize(
+    "sampler",
+    [
+        {"name": "md", "m": 4, "seed": 3},
+        {"name": "algorithm1", "m": 4, "seed": 3},
+        {"name": "uniform", "m": 4, "seed": 3},
+        {"name": "algorithm2", "m": 4, "seed": 3},
+    ],
+    ids=lambda s: s["name"],
+)
+def test_kill_resume_bit_identical(tmp_path, sampler):
+    spec = _spec(sampler=sampler)
+    full = _run_full(spec)
+    resumed = _run_interrupted(spec, os.path.join(tmp_path, "ck.npz"), kill_at=4)
+    assert full.to_json() == resumed.to_json()
+
+
+def test_async_planner_checkpoint_captures_sync_fixed_point(tmp_path):
+    """Async campaigns checkpoint through prepare_state(): the in-flight
+    rebuild is flushed, so the bundle holds the sync fixed point — the
+    restored sampler is state-equal (plan matrix, observation cursor, rng)
+    to the one that was killed, and the campaign runs to completion.
+
+    (Bit-identical *continuations* are pinned only for deterministic
+    planners above: async rebuild timing is a real race, so even two
+    uninterrupted async runs may legitimately differ in plan_lag_rounds.)
+    """
+    spec = _spec(
+        planner={"mode": "async", "rebuild_every": 1},
+        population={"name": "poisson", "options": {"leave_rate": 0.2, "drop_rate": 0.05}},
+    )
+    path = os.path.join(tmp_path, "ck.npz")
+    with build_experiment(spec, checkpoint_path=path) as srv:
+        for t in range(4):
+            srv.run_round(t)
+        srv.checkpoint()
+        plan_r = np.array(srv.sampler.plan.r, copy=True)
+        meta = srv.sampler.state_meta()
+        g = np.asarray(srv.sampler._store.snapshot())
+    with build_experiment(spec, checkpoint_path=path) as srv:
+        assert srv.resume() == 4
+        np.testing.assert_array_equal(srv.sampler.plan.r, plan_r)
+        restored = srv.sampler.state_meta()
+        assert restored["obs_seen"] == meta["obs_seen"]
+        assert restored["plan_version"] == meta["plan_version"]
+        assert restored["rng"] == meta["rng"]
+        np.testing.assert_array_equal(np.asarray(srv.sampler._store.snapshot()), g)
+        hist = srv.run()
+    assert [r.round for r in hist.records] == list(range(8))
+
+
+def test_run_checkpoint_cadence_and_cursor(tmp_path):
+    """run() writes on the checkpoint_every cadence; the bundle's cursor
+    equals the number of completed rounds at the write."""
+    path = os.path.join(tmp_path, "svc.npz")
+    spec = _spec(
+        train={**SPEC["train"], "n_rounds": 5, "checkpoint_every": 2},
+    )
+    with build_experiment(spec, checkpoint_path=path) as srv:
+        srv.run()
+        assert os.path.exists(path)
+    # last cadence write is after round 4 (t+1 = 4); round 5 is off-cadence
+    with build_experiment(spec, checkpoint_path=path) as srv:
+        assert srv.resume() == 4
+        hist = srv.run()
+    assert [r.round for r in hist.records] == [0, 1, 2, 3, 4]
+
+
+def test_should_stop_checkpoints_and_resume_extends_history(tmp_path):
+    """The SIGTERM path: should_stop trips mid-campaign → final checkpoint;
+    the resumed run's history strictly extends the checkpointed cursor."""
+    path = os.path.join(tmp_path, "svc.npz")
+    spec = _spec()
+    calls = {"n": 0}
+
+    def stop_after_3():
+        calls["n"] += 1
+        return calls["n"] >= 3
+
+    with build_experiment(spec, checkpoint_path=path) as srv:
+        srv.run(should_stop=stop_after_3)
+        assert len(srv.history.records) == 3
+    with build_experiment(spec, checkpoint_path=path) as srv:
+        start = srv.resume()
+        assert start == 3
+        hist = srv.run()
+    rounds = [r.round for r in hist.records]
+    assert rounds == list(range(8)) and rounds[start:] == [3, 4, 5, 6, 7]
+
+
+def test_resume_restores_history_and_rng_state(tmp_path):
+    """The restored server carries the pre-kill records verbatim and the
+    server/sampler rng mid-stream states (not re-seeded)."""
+    path = os.path.join(tmp_path, "ck.npz")
+    spec = _spec()
+    with build_experiment(spec, checkpoint_path=path) as srv:
+        for t in range(3):
+            srv.run_round(t)
+        pre = srv.history.to_json()
+        srv.checkpoint()
+        rng_state = srv._rng.bit_generator.state["state"]
+    with build_experiment(spec, checkpoint_path=path) as srv:
+        fresh_state = srv._rng.bit_generator.state["state"]
+        assert fresh_state != rng_state  # fresh build is at stream origin
+        srv.resume()
+        assert srv.history.to_json() == pre
+        assert srv._rng.bit_generator.state["state"] == rng_state
+
+
+def test_checkpoint_without_path_is_an_error():
+    spec = _spec(train={**SPEC["train"], "n_rounds": 1})
+    with build_experiment(spec) as srv:
+        with pytest.raises(ValueError, match="checkpoint path"):
+            srv.checkpoint()
+        with pytest.raises(ValueError, match="checkpoint path"):
+            srv.resume()
+
+
+def test_checkpoint_rejects_mismatched_sampler(tmp_path):
+    """Restoring into a structurally different sampler fails loudly instead
+    of silently mixing state (the restore layer's unknown/missing-leaf
+    guards reach through the server bundle)."""
+    path = os.path.join(tmp_path, "ck.npz")
+    with build_experiment(_spec()) as srv:
+        srv.run_round(0)
+        srv.checkpoint(path)
+    with build_experiment(_spec(sampler={"name": "md", "m": 4, "seed": 3})) as srv:
+        with pytest.raises(KeyError):
+            srv.resume(path)

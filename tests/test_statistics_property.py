@@ -95,3 +95,82 @@ def test_distinct_clients_probability_paper_number():
 
     p = md_prob_all_distinct(np.full(100, 0.01), 10)
     assert abs(p - 0.6282) < 1e-3
+
+
+# --------------------------------------------------------------------------
+# availability-conditioned unbiasedness (the continuous-service extension)
+# --------------------------------------------------------------------------
+masks = st.integers(min_value=0, max_value=10_000)
+
+
+def _conditional_expected_weights(plan, a):
+    """E[ω_i | available] under the conditional draw, in closed form.
+
+    Urn k draws client i w.p. r̃_ki = r_ki·a_i/s_k and contributes weight
+    w_k = s_k/Σ_j s_j, so E[ω_i] = Σ_k w_k·r̃_ki = Σ_k r_ki·a_i / Σ_j s_j.
+    """
+    from repro.core.samplers.base import conditional_plan
+
+    r_cond, w = conditional_plan(plan, a)
+    return (w[:, None] * r_cond).sum(axis=0)
+
+
+def _random_mask(n, seed, p_avail=0.6):
+    rng = np.random.default_rng(seed)
+    a = rng.random(n) < p_avail
+    if not a.any():
+        a[rng.integers(n)] = True
+    return a
+
+
+@given(populations, ms, masks)
+@settings(max_examples=30, deadline=None)
+def test_availability_conditioned_unbiasedness_algorithm1(ns, m, seed):
+    """For ANY eq.(8)-satisfying plan and ANY availability mask, the
+    importance-corrected conditional draw is unbiased over the available
+    set: E[ω_i | available] = p_i·a_i / Σ_j p_j·a_j exactly."""
+    pop = ClientPopulation(np.array(ns))
+    plan = build_plan_algorithm1(pop, m)
+    a = _random_mask(pop.n_clients, seed)
+    expect = _conditional_expected_weights(plan, a)
+    p = pop.importances
+    target = p * a / (p * a).sum()
+    np.testing.assert_allclose(expect, target, atol=1e-12)
+    assert (expect[~a] == 0).all()
+    np.testing.assert_allclose(expect.sum(), 1.0, atol=1e-12)
+
+
+@given(populations, ms, masks)
+@settings(max_examples=20, deadline=None)
+def test_availability_conditioned_unbiasedness_algorithm2_and_md(ns, m, seed):
+    from repro.core.types import SamplingPlan
+
+    pop = ClientPopulation(np.array(ns))
+    rng = np.random.default_rng(seed)
+    G = rng.normal(size=(pop.n_clients, 6))
+    a = _random_mask(pop.n_clients, seed + 1)
+    p = pop.importances
+    target = p * a / (p * a).sum()
+    for plan in (
+        build_plan_algorithm2(pop, m, G),
+        SamplingPlan(r=np.tile(p, (m, 1))),  # MD: all rows equal p
+    ):
+        np.testing.assert_allclose(
+            _conditional_expected_weights(plan, a), target, atol=1e-12
+        )
+
+
+def test_conditional_draw_monte_carlo_matches_expectation():
+    """The realized masked draw (importance-corrected urn weights) agrees
+    with the closed-form conditional expectation."""
+    from repro.core import Algorithm1Sampler
+
+    pop = ClientPopulation(np.array([100, 250, 500, 750, 1000] * 3))
+    m, T = 6, 8000
+    s = Algorithm1Sampler(pop, m, seed=0)
+    a = _random_mask(pop.n_clients, seed=5)
+    ws = np.stack([s.sample(t, a).agg_weights for t in range(T)])
+    np.testing.assert_allclose(ws.sum(axis=1), 1.0, atol=1e-12)  # mass conserved
+    assert (ws[:, ~a] == 0).all()  # never draws the unavailable
+    expect = _conditional_expected_weights(s.plan, a)
+    np.testing.assert_allclose(ws.mean(axis=0), expect, atol=5e-3)

@@ -70,10 +70,36 @@ def test_checkpoint_roundtrip(tmp_path):
     }
     path = os.path.join(tmp_path, "ckpt.npz")
     save_checkpoint(path, tree, step=7, extra={"note": "x"})
-    restored, step = restore_checkpoint(path, tree)
+    restored, step, extra = restore_checkpoint(path, tree)
     assert step == 7
+    assert extra == {"note": "x"}  # the side-channel survives the round trip
     np.testing.assert_allclose(restored["params"]["w"], tree["params"]["w"])
     assert restored["params"]["b"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_numpy_reference_stays_host_f64(tmp_path):
+    """A host f64 reference leaf restores as host f64 (never via jax f32)."""
+    tree = {"plan_r": np.linspace(0, 1, 7, dtype=np.float64)}
+    path = os.path.join(tmp_path, "ckpt.npz")
+    save_checkpoint(path, tree)
+    restored, _, extra = restore_checkpoint(path, tree)
+    assert extra == {}
+    assert isinstance(restored["plan_r"], np.ndarray)
+    assert restored["plan_r"].dtype == np.float64
+    np.testing.assert_array_equal(restored["plan_r"], tree["plan_r"])
+
+
+def test_checkpoint_restore_rejects_unknown_leaves(tmp_path):
+    """State in the .npz that the reference cannot place is an error."""
+    import pytest
+
+    tree = {"a": np.ones(3), "b": np.zeros(2)}
+    path = os.path.join(tmp_path, "ckpt.npz")
+    save_checkpoint(path, tree)
+    with pytest.raises(KeyError, match="refusing to silently drop"):
+        restore_checkpoint(path, {"a": np.ones(3)})
+    with pytest.raises(KeyError, match="missing leaf"):
+        restore_checkpoint(path, {"a": np.ones(3), "c": np.zeros(2)})
 
 
 def test_token_pipeline_learnable_structure():
