@@ -9,8 +9,8 @@ for the spec layer.
 grid × seeds) into a resumable RunStore (``--store DIR``, ephemeral when
 omitted; ``--workers k`` fans independent cells over a process pool) and
 collates it into figure-ready CSVs. ``--list`` prints every registered
-sampler / engine / dataset / benchmark module — the discoverability door
-for the spec and sweep layers.
+sampler / engine / dataset / population / clusterer / benchmark module —
+the discoverability door for the spec and sweep layers.
 
 Prints ``name,us_per_call,derived`` CSV rows:
   fig1_controlled      — Figure 1 (controlled MNIST-style setting)
@@ -113,14 +113,18 @@ def run_one_sweep(sweep_arg: str, store_dir: "str | None", workers: int) -> None
 
 def list_registered() -> None:
     """Print every registered name the spec/sweep doors can reach."""
+    from repro.core.clustering import CLUSTERERS
     from repro.core.samplers import SAMPLERS
     from repro.fl.engine import ENGINES
     from repro.fl.experiment import DATASETS
+    from repro.fl.population import POPULATIONS
 
-    print("samplers:  " + " ".join(SAMPLERS.names()))
-    print("engines:   " + " ".join(ENGINES.names()))
-    print("datasets:  " + " ".join(DATASETS.names()))
-    print("benchmarks: " + " ".join(name for name, _ in MODULES))
+    print("samplers:    " + " ".join(SAMPLERS.names()))
+    print("engines:     " + " ".join(ENGINES.names()))
+    print("datasets:    " + " ".join(DATASETS.names()))
+    print("populations: " + " ".join(POPULATIONS.names()))
+    print("clusterers:  " + " ".join(CLUSTERERS.names()))
+    print("benchmarks:  " + " ".join(name for name, _ in MODULES))
 
 
 def main(argv: "list[str] | None" = None) -> None:
@@ -145,7 +149,8 @@ def main(argv: "list[str] | None" = None) -> None:
     )
     ap.add_argument(
         "--list", action="store_true",
-        help="print registered samplers / engines / datasets / benchmark modules",
+        help="print registered samplers / engines / datasets / populations / "
+        "clusterers / benchmark modules",
     )
     args = ap.parse_args(sys.argv[1:] if argv is None else argv)
     if args.list:

@@ -16,8 +16,25 @@ echo "== tier-1: benchmark smoke (import + run sanity) =="
 python -m benchmarks.bench_sampler_cost --smoke
 python -m benchmarks.bench_round_engine --smoke
 python -m benchmarks.bench_engine_sharded --smoke
-python -m benchmarks.bench_async_planner --smoke
+python -m benchmarks.bench_async_planner --smoke --drift
 python -m benchmarks.bench_service_churn --smoke
+
+echo "== tier-1: fused streamed kernel parity vs numpy (ragged-chunk shape) =="
+# 13x101 is ragged against both the 8-row and 16-column tiles AND the
+# 32-wide d-chunk — the in-kernel masking path the fused grid must get right
+python - <<'EOF'
+import numpy as np
+from repro.core.clustering import pairwise_distances
+from repro.kernels.similarity.ops import pairwise_distances_streamed
+rng = np.random.default_rng(0)
+G = rng.normal(size=(13, 101)).astype(np.float32)
+for measure in ("arccos", "l2", "l1"):
+    ref = pairwise_distances(G, measure)
+    fused = np.asarray(pairwise_distances_streamed(
+        G, measure, block_n=8, block_d=16, d_chunk=32, interpret=True))
+    np.testing.assert_allclose(fused, ref, atol=1e-4, err_msg=measure)
+print("fused streamed == numpy reference (13x101 ragged, all measures)")
+EOF
 
 echo "== tier-1: sweep smoke (2 cells x 2 seeds, then resume on the same store) =="
 SWEEP_STORE="$(mktemp -d)"

@@ -1,6 +1,20 @@
 from repro.core.clustering.similarity import MEASURES, pairwise_distances
 from repro.core.clustering.ward import ward_linkage, linkage_children, leaves_of
 from repro.core.clustering.tree import cut_tree
+from repro.core.clustering.device import (
+    cluster_centroids,
+    kmeans_labels,
+    nearest_centroid_labels,
+    ward_linkage_device,
+)
+from repro.core.clustering.backends import (
+    CLUSTERERS,
+    kmeans_clusters,
+    register_clusterer,
+    resolve_clusterer,
+    ward_clusters,
+    ward_jit_clusters,
+)
 
 __all__ = [
     "MEASURES",
@@ -9,4 +23,14 @@ __all__ = [
     "linkage_children",
     "leaves_of",
     "cut_tree",
+    "ward_linkage_device",
+    "kmeans_labels",
+    "cluster_centroids",
+    "nearest_centroid_labels",
+    "CLUSTERERS",
+    "register_clusterer",
+    "resolve_clusterer",
+    "ward_clusters",
+    "ward_jit_clusters",
+    "kmeans_clusters",
 ]

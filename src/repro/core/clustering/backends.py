@@ -1,0 +1,165 @@
+"""Clustering backends behind the ``CLUSTERERS`` registry.
+
+Algorithm 2's plan rebuild needs *some* partition of the pool clients into
+K >= m groups of token mass <= M — Ward on pairwise similarity is the
+paper's choice, not the only valid one (FedSTaS stratifies with k-means
+over compressed gradients). This module gives every such partitioner one
+uniform signature and a name:
+
+    clusterer(G, token_mass, m, capacity, *,
+              measure="arccos", distance_fn=None, seed=0) -> list[ndarray]
+
+where ``G`` is the (n_pool, d) representative-gradient block (possibly a
+device array — backends that can, keep it there), ``token_mass[i] = m·n_i``
+and ``capacity = M`` are Algorithm 2's feasibility constraints, and the
+return is a list of disjoint local-index arrays covering ``0..n_pool-1``.
+
+Built-ins:
+
+* ``"ward"``     — the numpy Lance–Williams reference + dendrogram cut;
+  the default, bit-identical to the pre-registry pipeline.
+* ``"ward_jit"`` — same recurrence lowered as a jitted device loop
+  (:func:`repro.core.clustering.device.ward_linkage_device`); the distance
+  matrix is consumed where the distance backend left it.
+* ``"kmeans"``   — jitted Lloyd over G directly (no (n, n) matrix at all;
+  O(n·k·d) — the backend that makes n≈10⁴ rebuilds tractable), followed by
+  a host capacity repair that splits over-cap / too-few groups.
+
+``register_clusterer("mine", fn)`` plugs a new partitioner into every
+spec-driven experiment via ``PlannerSpec(clusterer="mine")``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.clustering.device import kmeans_labels, ward_linkage_device
+from repro.core.clustering.similarity import pairwise_distances
+from repro.core.clustering.tree import cut_tree
+from repro.core.clustering.ward import ward_linkage
+from repro.core.registry import Registry
+
+
+def ward_clusters(
+    G,
+    token_mass: np.ndarray,
+    m: int,
+    capacity: int,
+    *,
+    measure: str = "arccos",
+    distance_fn=None,
+    seed: int = 0,
+):
+    """Numpy Ward + dendrogram cut — the paper-faithful reference path."""
+    del seed  # deterministic
+    dfn = distance_fn or pairwise_distances
+    dist = np.asarray(dfn(G, measure))
+    link = ward_linkage(dist)
+    return cut_tree(link, int(G.shape[0]), m, token_mass, capacity)
+
+
+def ward_jit_clusters(
+    G,
+    token_mass: np.ndarray,
+    m: int,
+    capacity: int,
+    *,
+    measure: str = "arccos",
+    distance_fn=None,
+    seed: int = 0,
+):
+    """Jitted Lance–Williams over the device distance matrix.
+
+    The distance matrix never visits host — only the (n-1, 4) linkage rows
+    do, for the (tiny) dendrogram cut. Merge order matches ``"ward"``
+    exactly on distinct distances; heights agree to f32 tolerance.
+    """
+    del seed  # deterministic
+    dfn = distance_fn or pairwise_distances
+    link = ward_linkage_device(dfn(G, measure))
+    return cut_tree(link, int(G.shape[0]), m, token_mass, capacity)
+
+
+def _capacity_groups(
+    labels: np.ndarray, token_mass: np.ndarray, m: int, capacity: int
+) -> list[np.ndarray]:
+    """Repair raw cluster labels into Algorithm-2-feasible groups.
+
+    Over-cap clusters are split first-fit in client-index order (each piece
+    <= capacity); then the largest groups split in half until K >= m. Same
+    feasibility contract as :func:`repro.core.clustering.tree.cut_tree`:
+    every singleton fits (mass <= capacity) or we raise.
+    """
+    token_mass = np.asarray(token_mass, dtype=np.int64)
+    if (token_mass > capacity).any():
+        i = int(np.argmax(token_mass > capacity))
+        raise ValueError(
+            f"client {i} has mass {token_mass[i]} > M={capacity}; allocate its "
+            "dedicated distributions first (Section 5 final remark)"
+        )
+    groups: list[np.ndarray] = []
+    for c in np.unique(labels):
+        members = np.flatnonzero(labels == c)
+        run: list[int] = []
+        run_mass = 0
+        for i in members:
+            if run and run_mass + int(token_mass[i]) > capacity:
+                groups.append(np.asarray(run, dtype=np.int64))
+                run, run_mass = [], 0
+            run.append(int(i))
+            run_mass += int(token_mass[i])
+        if run:
+            groups.append(np.asarray(run, dtype=np.int64))
+    n = int(labels.shape[0])
+    while len(groups) < m:
+        gi = max(range(len(groups)), key=lambda g: len(groups[g]))
+        g = groups[gi]
+        if len(g) < 2:
+            raise ValueError(f"cannot reach K >= m={m} groups with n={n} clients")
+        half = len(g) // 2
+        groups[gi] = g[:half]
+        groups.append(g[half:])
+    return groups
+
+
+def kmeans_clusters(
+    G,
+    token_mass: np.ndarray,
+    m: int,
+    capacity: int,
+    *,
+    measure: str = "arccos",
+    distance_fn=None,
+    seed: int = 0,
+):
+    """Jitted Lloyd k-means + capacity repair — the O(n·k·d) backend.
+
+    Never forms an (n, n) matrix (``distance_fn`` is ignored), so it is the
+    rebuild path that stays off the profile at n ≈ 10⁴ clients. ``seed``
+    fixes the centroid initialization; the whole partition is deterministic
+    in (G, m, measure, seed).
+    """
+    del distance_fn  # clusters G directly
+    n = int(G.shape[0])
+    labels = kmeans_labels(G, min(m, n), measure=measure, seed=seed)
+    return _capacity_groups(labels, token_mass, m, capacity)
+
+
+#: name -> clusterer; ``"ward"`` is the default everywhere a
+#: ``PlannerSpec.clusterer`` is not given.
+CLUSTERERS = Registry(
+    "clusterer",
+    {
+        "ward": ward_clusters,
+        "ward_jit": ward_jit_clusters,
+        "kmeans": kmeans_clusters,
+    },
+)
+
+register_clusterer = CLUSTERERS.register
+
+
+def resolve_clusterer(clusterer):
+    """Name or callable -> callable (names resolve through the registry)."""
+    if callable(clusterer):
+        return clusterer
+    return CLUSTERERS.get(clusterer)

@@ -1,0 +1,252 @@
+"""Jitted (device-side) clustering primitives for the plan-rebuild pipeline.
+
+The numpy Ward implementation (:mod:`repro.core.clustering.ward`) pulls the
+(n, n) distance matrix to host and runs the Lance–Williams recurrence in
+f64 — correct, but it puts an O(n³) host loop on every plan rebuild and
+forces a device→host copy of the distance matrix. This module lowers the
+same arithmetic onto the device:
+
+* :func:`ward_linkage_device` — the exact Lance–Williams update as a jitted
+  ``lax.fori_loop`` over the device distance matrix. Only the (n-1, 4)
+  linkage rows come back to host (for the tree cut). Merge order is
+  identical to the numpy reference whenever pairwise distances are distinct
+  (both use first-minimum row-major argmin tie-breaking); heights agree to
+  f32 accumulation tolerance.
+* :func:`kmeans_labels` — jitted Lloyd iterations with deterministic
+  host-seeded initialization; the O(n·k·d) alternative that never builds an
+  (n, n) matrix at all, which is what makes n=10k rebuilds tractable.
+* :func:`cluster_centroids` / :func:`nearest_centroid_labels` — the cheap
+  assignment machinery the drift-triggered planner uses to decide *whether*
+  a rebuild is worth scheduling (see ``repro.fl.planner``).
+
+jax is imported lazily; every function falls back to numerically identical
+numpy when jax is absent, keeping ``repro.core`` importable without it.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+
+def _jax():
+    try:
+        import jax  # noqa: F401
+    except ImportError:
+        return None
+    return jax
+
+
+# --------------------------------------------------------------------------
+# Ward: Lance–Williams as a jitted device loop
+# --------------------------------------------------------------------------
+@functools.lru_cache(maxsize=32)
+def _ward_device_fn(n: int):
+    jax = _jax()
+    import jax.numpy as jnp
+
+    def step(t, carry):
+        d2, size, cid, active, out = carry
+        masked = jnp.where(active[:, None] & active[None, :], d2, jnp.inf)
+        # flat first-minimum in row-major order — numpy's argmin tie-breaking
+        flat = jnp.argmin(masked)
+        i0, j0 = flat // n, flat % n
+        i, j = jnp.minimum(i0, j0), jnp.maximum(i0, j0)
+        dij2 = masked[i, j]
+        a = jnp.minimum(cid[i], cid[j]).astype(jnp.float32)
+        b = jnp.maximum(cid[i], cid[j]).astype(jnp.float32)
+        ni, nj = size[i], size[j]
+        out = out.at[t].set(
+            jnp.stack([a, b, jnp.sqrt(jnp.maximum(dij2, 0.0)), ni + nj])
+        )
+        # Lance–Williams Ward update: merge j into i (vector update over the
+        # still-active others — the same masked arithmetic as the numpy
+        # reference, so merge decisions coincide on distinct distances)
+        upd = active.at[i].set(False).at[j].set(False)
+        nk = size
+        new = ((ni + nk) * d2[i] + (nj + nk) * d2[j] - nk * dij2) / (ni + nj + nk)
+        rowi = jnp.where(upd, new, d2[i])
+        d2 = d2.at[i, :].set(rowi)
+        d2 = d2.at[:, i].set(rowi)
+        size = size.at[i].set(ni + nj)
+        active = active.at[j].set(False)
+        cid = cid.at[i].set(n + t)
+        return d2, size, cid, active, out
+
+    def build(dist):
+        d2 = dist.astype(jnp.float32) ** 2
+        d2 = jnp.where(jnp.eye(n, dtype=bool), jnp.inf, d2)
+        size = jnp.ones(n, jnp.float32)
+        cid = jnp.arange(n, dtype=jnp.int32)
+        active = jnp.ones(n, dtype=bool)
+        out = jnp.zeros((n - 1, 4), jnp.float32)
+        carry = (d2, size, cid, active, out)
+        return jax.lax.fori_loop(0, n - 1, step, carry)[-1]
+
+    return jax.jit(build)
+
+
+def ward_linkage_device(dist) -> np.ndarray:
+    """(n, n) distance matrix -> scipy-style (n-1, 4) linkage, on device.
+
+    ``dist`` may be a jax device array (the fused similarity kernel's
+    output) — it is consumed where it lives; only the linkage rows (a few
+    KB) come back to host. Falls back to the numpy reference when jax is
+    unavailable.
+    """
+    n = int(dist.shape[0])
+    if tuple(dist.shape) != (n, n):
+        raise ValueError(f"need square distance matrix, got {tuple(dist.shape)}")
+    if n < 2:
+        return np.zeros((0, 4))
+    if _jax() is None:
+        from repro.core.clustering.ward import ward_linkage
+
+        return ward_linkage(np.asarray(dist))
+    import jax.numpy as jnp
+
+    out = _ward_device_fn(n)(jnp.asarray(dist, jnp.float32))
+    return np.asarray(out, dtype=np.float64)
+
+
+# --------------------------------------------------------------------------
+# k-means: jitted Lloyd iterations
+# --------------------------------------------------------------------------
+def _normalize_rows(X, xp):
+    norms = xp.sqrt((X * X).sum(axis=1))
+    safe = xp.where(norms > 0, norms, 1.0)
+    return X / safe[:, None]
+
+
+@functools.lru_cache(maxsize=32)
+def _lloyd_device_fn(n_iters: int):
+    jax = _jax()
+    import jax.numpy as jnp
+
+    def assign(X, cent):
+        d2 = (
+            (X * X).sum(axis=1)[:, None]
+            + (cent * cent).sum(axis=1)[None, :]
+            - 2.0 * X @ cent.T
+        )
+        return jnp.argmin(d2, axis=1)
+
+    def run(X, cent):
+        k = cent.shape[0]
+
+        def body(_, cent):
+            lab = assign(X, cent)
+            onehot = (lab[:, None] == jnp.arange(k)[None, :]).astype(jnp.float32)
+            counts = onehot.sum(axis=0)
+            sums = onehot.T @ X
+            return jnp.where(
+                counts[:, None] > 0, sums / jnp.maximum(counts, 1.0)[:, None], cent
+            )
+
+        cent = jax.lax.fori_loop(0, n_iters, body, cent)
+        return assign(X, cent), cent
+
+    return jax.jit(run)
+
+
+def kmeans_labels(
+    G,
+    k: int,
+    *,
+    measure: str = "arccos",
+    seed: int = 0,
+    n_iters: int = 25,
+) -> np.ndarray:
+    """Deterministic Lloyd k-means over representative gradients.
+
+    Initial centroids are ``k`` rows chosen by a host
+    ``np.random.default_rng(seed)`` permutation (backend-independent), then
+    ``n_iters`` jitted Lloyd iterations refine them on device (numpy
+    fallback runs the identical arithmetic). For ``measure="arccos"`` rows
+    are L2-normalized first (zero cold-start rows stay zero, so they share
+    a cluster exactly like the paper's convention); ``l2``/``l1`` cluster
+    the raw vectors. Fixed ``(G, k, measure, seed, n_iters)`` → identical
+    labels on every call.
+    """
+    n = int(G.shape[0])
+    if not 1 <= k <= n:
+        raise ValueError(f"need 1 <= k <= n, got k={k} for n={n} rows")
+    init_idx = np.random.default_rng(seed).permutation(n)[:k]
+    jax = _jax()
+    if jax is not None:
+        import jax.numpy as jnp
+
+        X = jnp.asarray(G, jnp.float32)
+        if measure == "arccos":
+            X = _normalize_rows(X, jnp)
+        labels, _ = _lloyd_device_fn(int(n_iters))(X, X[jnp.asarray(init_idx)])
+        return np.asarray(labels, dtype=np.int64)
+    X = np.asarray(G, np.float32)
+    if measure == "arccos":
+        X = _normalize_rows(X, np)
+    cent = X[init_idx]
+    for _ in range(int(n_iters)):
+        d2 = (X * X).sum(1)[:, None] + (cent * cent).sum(1)[None, :] - 2.0 * X @ cent.T
+        lab = np.argmin(d2, axis=1)
+        for c in range(k):
+            members = lab == c
+            if members.any():
+                cent[c] = X[members].mean(axis=0)
+    d2 = (X * X).sum(1)[:, None] + (cent * cent).sum(1)[None, :] - 2.0 * X @ cent.T
+    return np.argmin(d2, axis=1).astype(np.int64)
+
+
+# --------------------------------------------------------------------------
+# assignment machinery for the drift trigger
+# --------------------------------------------------------------------------
+def cluster_centroids(G, labels: np.ndarray, n_clusters: int):
+    """(k, d) per-cluster mean of G rows; rows with label < 0 are ignored.
+
+    Runs on device when jax is present (one one-hot matmul — the G rows
+    never round-trip to host); empty clusters get a zero centroid.
+    """
+    labels = np.asarray(labels)
+    jax = _jax()
+    if jax is not None:
+        import jax.numpy as jnp
+
+        X = jnp.asarray(G, jnp.float32)
+        lab = jnp.asarray(labels)
+        onehot = (
+            (lab[:, None] == jnp.arange(n_clusters)[None, :]) & (lab >= 0)[:, None]
+        ).astype(jnp.float32)
+        counts = onehot.sum(axis=0)
+        return (onehot.T @ X) / jnp.maximum(counts, 1.0)[:, None]
+    X = np.asarray(G, np.float32)
+    out = np.zeros((n_clusters, X.shape[1]), np.float32)
+    for c in range(n_clusters):
+        members = labels == c
+        if members.any():
+            out[c] = X[members].mean(axis=0)
+    return out
+
+
+def nearest_centroid_labels(G, centroids) -> np.ndarray:
+    """Assign every G row to its nearest centroid (squared-L2, first-min).
+
+    The O(n·k·d) statistic behind the drift trigger: with centroids frozen
+    at the last rebuild, the fraction of rows whose nearest centroid
+    changed is exactly the assignment churn of the fresh gradients against
+    the live plan's clusters.
+    """
+    jax = _jax()
+    if jax is not None:
+        import jax.numpy as jnp
+
+        X = jnp.asarray(G, jnp.float32)
+        C = jnp.asarray(centroids, jnp.float32)
+        d2 = (
+            (X * X).sum(axis=1)[:, None]
+            + (C * C).sum(axis=1)[None, :]
+            - 2.0 * X @ C.T
+        )
+        return np.asarray(jnp.argmin(d2, axis=1), dtype=np.int64)
+    X = np.asarray(G, np.float32)
+    C = np.asarray(centroids, np.float32)
+    d2 = (X * X).sum(1)[:, None] + (C * C).sum(1)[None, :] - 2.0 * X @ C.T
+    return np.argmin(d2, axis=1).astype(np.int64)

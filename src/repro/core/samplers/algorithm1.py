@@ -40,5 +40,9 @@ class Algorithm1Sampler(ClusteredSampler):
     def plan_telemetry(self) -> tuple[int, int]:
         return self._service.telemetry()
 
+    def plan_cost_telemetry(self) -> tuple[float, float]:
+        # build cost of the (static) version-0 plan; drift trigger never runs
+        return self._service.last_build_ms(), self._service.last_drift()
+
     def close(self) -> None:
         self._service.close()

@@ -27,29 +27,35 @@ from typing import Callable, Optional, Union
 import numpy as np
 
 from repro.core.allocation import allocate_by_groups
-from repro.core.clustering.similarity import pairwise_distances
-from repro.core.clustering.tree import cut_tree
-from repro.core.clustering.ward import ward_linkage
+from repro.core.clustering.backends import resolve_clusterer
 from repro.core.samplers.clustered import ClusteredSampler
 from repro.core.types import ClientPopulation, SamplingPlan, SampleResult
 
 # pairwise-distance backend signature: (G, measure) -> (n, n) distances
 DistanceFn = Callable[[np.ndarray, str], np.ndarray]
 
+# clusterer signature: see repro.core.clustering.backends
+ClustererFn = Callable[..., list]
 
-def _resolve_distance_fn(distance_fn: Union[DistanceFn, str, None]) -> Optional[DistanceFn]:
+
+def _resolve_distance_fn(
+    distance_fn: Union[DistanceFn, str, None], *, as_numpy: bool = False
+) -> Optional[DistanceFn]:
     """Map the sampler's ``distance_fn`` argument to a callable.
 
     Strings name a backend (see
     :func:`repro.kernels.similarity.ops.resolve_distance_backend`); the
     import is deferred so ``repro.core`` stays importable without jax.
-    ``None`` keeps the numpy host reference.
+    ``None`` keeps the numpy host reference. ``as_numpy=False`` leaves
+    device backends' (n, n) output on device — the clustering backend
+    decides whether it ever visits host (the numpy Ward reference copies
+    it; ``ward_jit``/``kmeans`` never do).
     """
     if distance_fn is None or callable(distance_fn):
         return distance_fn
     from repro.kernels.similarity.ops import resolve_distance_backend
 
-    return resolve_distance_backend(distance_fn)
+    return resolve_distance_backend(distance_fn, as_numpy=as_numpy)
 
 
 def build_plan_algorithm2(
@@ -59,13 +65,18 @@ def build_plan_algorithm2(
     *,
     measure: str = "arccos",
     distance_fn: Optional[DistanceFn] = None,
+    clusterer: Union[ClustererFn, str] = "ward",
+    clusterer_seed: int = 0,
 ) -> SamplingPlan:
     """Build the similarity-clustered ``r`` matrix for one round.
 
-    ``G`` is passed to the distance backend untouched — a device array stays
-    on device for the O(n²d) stage (only the (n, n) distance matrix comes
-    back to host for Ward); each backend picks its own dtype (f64 only for
-    the numpy reference, f32 on device).
+    ``G`` is passed to the clustering backend untouched — a device array
+    stays on device through the O(n²d) distance stage and (for the device
+    clusterers) the clustering itself; only the group structure comes back
+    to host for the final urn construction. ``clusterer`` names a
+    :data:`repro.core.clustering.backends.CLUSTERERS` entry (``"ward"`` —
+    the paper-faithful numpy reference and default; ``"ward_jit"``;
+    ``"kmeans"``) or is a callable with the same signature.
     """
     n = population.n_clients
     M = population.total_samples
@@ -86,10 +97,16 @@ def build_plan_algorithm2(
     cluster_of = np.full(n, -1, dtype=np.int64)
     if m_pool > 0:
         pool = np.flatnonzero(pool_mass > 0)
-        dfn = distance_fn or pairwise_distances
-        dist = np.asarray(dfn(G[pool], measure))
-        link = ward_linkage(dist)
-        groups_local = cut_tree(link, len(pool), m_pool, pool_mass[pool], M)
+        cluster = resolve_clusterer(clusterer)
+        groups_local = cluster(
+            G[pool],
+            pool_mass[pool],
+            m_pool,
+            M,
+            measure=measure,
+            distance_fn=distance_fn,
+            seed=clusterer_seed,
+        )
         groups = [pool[g] for g in groups_local]
         for gid, g in enumerate(groups):
             cluster_of[g] = gid
@@ -123,9 +140,11 @@ class Algorithm2Sampler(ClusteredSampler):
         measure: str = "arccos",
         seed: int = 0,
         distance_fn: Union[DistanceFn, str, None] = "auto",
+        clusterer: Union[ClustererFn, str] = "ward",
         staleness_decay: float = 1.0,
         planner: str = "sync",
         rebuild_every: int = 1,
+        drift_threshold: Optional[float] = None,
     ):
         """``staleness_decay`` < 1 is a beyond-paper extension: every round,
         stored representative gradients shrink by this factor, so clients
@@ -141,19 +160,31 @@ class Algorithm2Sampler(ClusteredSampler):
         accumulation for model-sized gradients; ``"numpy"``), a custom
         callable, or ``None`` for the numpy host reference.
 
+        ``clusterer`` selects the grouping backend for the pool clients
+        (a ``CLUSTERERS`` name — ``"ward"`` default, ``"ward_jit"``,
+        ``"kmeans"`` — or a callable; see
+        :mod:`repro.core.clustering.backends`). The device clusterers
+        consume the distance matrix / G where the store left them, so the
+        rebuild never materializes a host copy of the gradient block.
+
         ``planner`` selects when Algorithm 2's O(n²d + n³) rebuild runs:
         ``"sync"`` inside ``observe_updates`` (the parity reference) or
         ``"async"`` on a background worker while the next round trains.
         ``rebuild_every=k`` re-clusters only every k observed rounds — the
         gradient store still absorbs every round's updates, so the k-th
         rebuild sees all of them (``RoundRecord.plan_version`` records which
-        observation each round's plan incorporates)."""
+        observation each round's plan incorporates). ``drift_threshold``
+        replaces the fixed cadence with the planner's measured trigger: a
+        rebuild runs only when the assignment churn of the fresh gradients
+        against the live plan's clusters reaches the threshold (see
+        :class:`repro.fl.planner.AssignmentDriftMonitor`)."""
         from repro.fl.gradient_store import GradientStore
         from repro.fl.planner import PlanService
 
         self.measure = measure
         self.update_dim = int(update_dim)
         self._distance_fn = _resolve_distance_fn(distance_fn)
+        self._clusterer = clusterer
         self.staleness_decay = float(staleness_decay)
         self._store = GradientStore(
             population.n_clients, update_dim, staleness_decay=staleness_decay
@@ -161,7 +192,13 @@ class Algorithm2Sampler(ClusteredSampler):
 
         def build(G) -> SamplingPlan:
             return build_plan_algorithm2(
-                population, m, G, measure=measure, distance_fn=self._distance_fn
+                population,
+                m,
+                G,
+                measure=measure,
+                distance_fn=self._distance_fn,
+                clusterer=self._clusterer,
+                clusterer_seed=seed,
             )
 
         self._service = PlanService(
@@ -169,6 +206,7 @@ class Algorithm2Sampler(ClusteredSampler):
             mode=planner,
             initial_input=self._store.snapshot(),
             rebuild_every=rebuild_every,
+            drift_threshold=drift_threshold,
         )
         super().__init__(population, self._service.current().plan, seed=seed)
 
@@ -203,6 +241,9 @@ class Algorithm2Sampler(ClusteredSampler):
 
     def plan_telemetry(self) -> tuple[int, int]:
         return self._service.telemetry()
+
+    def plan_cost_telemetry(self) -> tuple[float, float]:
+        return self._service.last_build_ms(), self._service.last_drift()
 
     def flush_plan(self) -> None:
         """Block until any in-flight rebuild lands, then swap it in.

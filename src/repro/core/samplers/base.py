@@ -123,6 +123,17 @@ class ClientSampler(abc.ABC):
         """
         return (0, 0)
 
+    def plan_cost_telemetry(self) -> tuple[float, float]:
+        """(plan_build_ms, plan_drift) of the backing plan service.
+
+        Plan-free and static-plan samplers report (-1.0, -1.0);
+        PlanService-backed samplers report the wall-clock ms of the most
+        recent completed rebuild and the drift statistic measured at the
+        most recent observation (-1.0 when the drift trigger is off). Lands
+        in ``RoundRecord.plan_build_ms`` / ``plan_drift``.
+        """
+        return (-1.0, -1.0)
+
     def close(self) -> None:
         """Release background resources (async planner workers)."""
 

@@ -138,35 +138,64 @@ class SamplerSpec:
 
 @dataclasses.dataclass(frozen=True)
 class PlannerSpec:
-    """When plan-rebuilding samplers re-cluster.
+    """When — and with what backend — plan-rebuilding samplers re-cluster.
 
     ``mode="async"`` overlaps Algorithm 2's rebuild with the next round's
     local work; ``rebuild_every=k`` re-clusters only every k observed
     rounds (``RoundRecord.plan_version`` records which observation each
-    round's plan incorporates). Ignored by plan-free samplers only when it
-    is the default — asking a planless scheme for an async planner is an
+    round's plan incorporates); ``drift_threshold`` replaces the fixed
+    cadence with the measured trigger — a rebuild fires only when the
+    assignment churn of fresh gradients against the live plan's clusters
+    reaches the threshold (``RoundRecord.plan_drift`` records it).
+    ``clusterer`` names the grouping backend from
+    :data:`repro.core.clustering.backends.CLUSTERERS` (``"ward"`` — the
+    paper-faithful default, ``"ward_jit"``, ``"kmeans"``, or anything
+    ``register_clusterer`` added). Ignored by plan-free samplers only when
+    it is the default — asking a planless scheme for an async planner is an
     error, not a silent no-op.
     """
 
     mode: str = "sync"
     rebuild_every: int = 1
+    clusterer: str = "ward"
+    drift_threshold: Optional[float] = None
 
     def __post_init__(self):
         if self.mode not in ("sync", "async"):
             raise ValueError(f"unknown planner mode {self.mode!r}; choose sync | async")
         if self.rebuild_every < 1:
             raise ValueError(f"rebuild_every must be >= 1, got {self.rebuild_every}")
+        if self.drift_threshold is not None:
+            if self.drift_threshold < 0:
+                raise ValueError(
+                    f"drift_threshold must be >= 0, got {self.drift_threshold}"
+                )
+            if self.rebuild_every != 1:
+                raise ValueError(
+                    "drift_threshold and rebuild_every are alternative rebuild "
+                    f"schedules; got both (rebuild_every={self.rebuild_every})"
+                )
 
     @property
     def is_default(self) -> bool:
-        return self.mode == "sync" and self.rebuild_every == 1
+        return (
+            self.mode == "sync"
+            and self.rebuild_every == 1
+            and self.clusterer == "ward"
+            and self.drift_threshold is None
+        )
 
     @classmethod
     def from_dict(cls, d: dict) -> "PlannerSpec":
         return _from_dict(cls, d)
 
     def to_dict(self) -> dict:
-        return {"mode": self.mode, "rebuild_every": self.rebuild_every}
+        return {
+            "mode": self.mode,
+            "rebuild_every": self.rebuild_every,
+            "clusterer": self.clusterer,
+            "drift_threshold": self.drift_threshold,
+        }
 
 
 @dataclasses.dataclass(frozen=True)
@@ -387,6 +416,22 @@ def build_sampler(
             kwargs.setdefault("planner", planner.mode)
             if "rebuild_every" in params:
                 kwargs.setdefault("rebuild_every", planner.rebuild_every)
+            if "clusterer" in params:
+                kwargs.setdefault("clusterer", planner.clusterer)
+            elif planner.clusterer != "ward":
+                raise ValueError(
+                    f"sampler {spec.name!r} accepts no clusterer; "
+                    f"PlannerSpec.clusterer={planner.clusterer!r} would be "
+                    "silently ignored"
+                )
+            if "drift_threshold" in params:
+                kwargs.setdefault("drift_threshold", planner.drift_threshold)
+            elif planner.drift_threshold is not None:
+                raise ValueError(
+                    f"sampler {spec.name!r} accepts no drift_threshold; "
+                    f"PlannerSpec.drift_threshold={planner.drift_threshold} "
+                    "would be silently ignored"
+                )
         elif not planner.is_default:
             raise ValueError(
                 f"sampler {spec.name!r} has no plan service; a non-default "

@@ -27,6 +27,13 @@ class RoundRecord:
     # >= 0 when re-clustering overlaps client local work, see fl.planner)
     plan_version: int = 0
     plan_lag_rounds: int = 0
+    # rebuild-cost telemetry (plan-rebuilding samplers only): wall-clock ms
+    # of the most recent completed plan build, and the drift statistic the
+    # planner measured this round (assignment churn in [0, 1], or inf when
+    # unmeasurable). -1.0 = not applicable (plan-free sampler / drift
+    # trigger disabled).
+    plan_build_ms: float = -1.0
+    plan_drift: float = -1.0
     # continuous-service telemetry (see repro.fl.population): how many
     # clients the availability mask admitted this round (-1 = no population
     # process, the paper's fixed-n behaviour), how many realized

@@ -25,21 +25,87 @@ A plan's ``version`` is the index of the observation it incorporates
 0 in sync mode by construction, ≥ 0 under async overlap; it lands in
 ``RoundRecord.plan_lag_rounds`` since the server observes once per round.
 
-The module is dependency-light (stdlib + ``repro.core.types`` only): the
+Rebuild scheduling is either a fixed cadence (``rebuild_every=k``, the
+default) or *measured*: with ``drift_threshold`` set, every observation
+computes a cheap on-device drift statistic — the assignment churn of the
+fresh representative gradients against the live plan's clusters
+(:class:`AssignmentDriftMonitor`) — and a rebuild runs only when it crosses
+the threshold. The statistic is O(n·k·d) (one nearest-centroid pass), so
+deciding *not* to rebuild costs a vanishing fraction of the O(n²d + n³)
+rebuild it skips. Both the drift value and the wall-clock cost of each
+rebuild are exposed (:meth:`PlanService.last_drift` /
+:meth:`PlanService.last_build_ms`) and land in
+``RoundRecord.plan_drift`` / ``plan_build_ms``.
+
+The module is dependency-light (stdlib + numpy + ``repro.core``): the
 snapshot is opaque to the service — device arrays pass straight through to
-``build_fn`` without a host round-trip. jax arrays are immutable, so a
-snapshot read by the worker while the engine scatters new updates into the
-store is consistent for free.
+``build_fn`` without a host round-trip (the drift monitor, when enabled,
+consumes them on device too). jax arrays are immutable, so a snapshot read
+by the worker while the engine scatters new updates into the store is
+consistent for free.
 """
 from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from typing import Any, Callable, Optional
+
+import numpy as np
 
 from repro.core.types import SamplingPlan
 
 BuildFn = Callable[[Any], SamplingPlan]
+
+
+class AssignmentDriftMonitor:
+    """Assignment churn of fresh gradients vs the live plan's clusters.
+
+    At each rebuild the monitor freezes the plan's cluster structure as a
+    set of centroids (per-cluster means of the snapshot rows the plan
+    grouped, ``plan.cluster_of >= 0``) plus the baseline nearest-centroid
+    assignment of that snapshot. :meth:`drift` then measures, for a fresh
+    snapshot, the fraction of rows whose nearest centroid changed — 0.0
+    when the gradients still sort into the same clusters (identical
+    assignments ⇒ identical statistic), growing monotonically with label
+    churn. Plans with no cluster structure (all-dedicated urns) and the
+    never-baselined cold start report ``inf``: when churn cannot be
+    measured, the trigger errs toward rebuilding.
+
+    All heavy ops run through :mod:`repro.core.clustering.device`, so a
+    device-resident snapshot never round-trips to host (only the scalar
+    comes back). State swaps are atomic single-attribute stores, safe for
+    the async planner's reader (observe) / writer (worker) threads.
+    """
+
+    def __init__(self):
+        self._state: Optional[tuple[Any, np.ndarray]] = None  # (centroids, baseline)
+
+    def rebaseline(self, snapshot: Any, plan: SamplingPlan) -> None:
+        """Freeze ``plan``'s clusters over ``snapshot`` as the new baseline."""
+        from repro.core.clustering.device import (
+            cluster_centroids,
+            nearest_centroid_labels,
+        )
+
+        labels = None if plan.cluster_of is None else np.asarray(plan.cluster_of)
+        if labels is None or not (labels >= 0).any():
+            self._state = None
+            return
+        k = int(labels.max()) + 1
+        centroids = cluster_centroids(snapshot, labels, k)
+        self._state = (centroids, nearest_centroid_labels(snapshot, centroids))
+
+    def drift(self, snapshot: Any) -> float:
+        """Fraction of rows whose nearest baseline centroid changed."""
+        from repro.core.clustering.device import nearest_centroid_labels
+
+        state = self._state
+        if state is None:
+            return float("inf")
+        centroids, baseline = state
+        fresh = nearest_centroid_labels(snapshot, centroids)
+        return float(np.mean(fresh != baseline))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,6 +130,16 @@ class PlanService:
     which observation the active plan incorporates and how far it trails).
     Snapshots are cumulative store states, so skipping intermediates loses
     nothing: the k-th snapshot contains every update since the last rebuild.
+
+    ``drift_threshold`` replaces the fixed cadence with the measured
+    trigger: each observation computes the drift statistic and a rebuild
+    fires iff ``drift >= drift_threshold``. A threshold of 0.0 degenerates
+    to rebuild-on-any-churn (and, since the cold start reports ``inf``,
+    fires on the first observation); thresholds > 1 never fire on a
+    measurable plan. Mutually exclusive with a non-default
+    ``rebuild_every`` — the two scheduling policies would silently mask
+    each other. Requires array-like snapshots (the drift monitor computes
+    nearest-centroid assignments over them).
     """
 
     MODES = ("sync", "async")
@@ -75,23 +151,53 @@ class PlanService:
         mode: str = "sync",
         initial_input: Any = None,
         rebuild_every: int = 1,
+        drift_threshold: Optional[float] = None,
+        drift_monitor: Optional[AssignmentDriftMonitor] = None,
     ):
         if mode not in self.MODES:
             raise ValueError(f"unknown planner mode {mode!r}; choose from {self.MODES}")
         if rebuild_every < 1:
             raise ValueError(f"rebuild_every must be >= 1, got {rebuild_every}")
+        if drift_threshold is not None:
+            if drift_threshold < 0:
+                raise ValueError(
+                    f"drift_threshold must be >= 0, got {drift_threshold}"
+                )
+            if rebuild_every != 1:
+                raise ValueError(
+                    "drift_threshold and rebuild_every are alternative rebuild "
+                    f"schedules; got both (rebuild_every={rebuild_every}) — "
+                    "pick one"
+                )
         self.mode = mode
         self.rebuild_every = int(rebuild_every)
+        self.drift_threshold = None if drift_threshold is None else float(drift_threshold)
         self._build_fn = build_fn
+        self._monitor = (
+            (drift_monitor or AssignmentDriftMonitor())
+            if drift_threshold is not None
+            else drift_monitor
+        )
         self._cond = threading.Condition()
-        self._current = VersionedPlan(build_fn(initial_input), version=0)
+        self._current = VersionedPlan(self._timed_build(initial_input), version=0)
+        if self._monitor is not None:
+            self._monitor.rebaseline(initial_input, self._current.plan)
         self._completed: Optional[VersionedPlan] = None  # built, not yet polled
         self._pending: Optional[tuple[int, Any]] = None  # latest-wins snapshot
         self._building = False
         self._closed = False
         self._error: Optional[BaseException] = None
         self._obs_seen = 0
+        self._rebuilds = 0
+        self._last_drift = -1.0
         self._worker: Optional[threading.Thread] = None
+
+    def _timed_build(self, snapshot: Any) -> SamplingPlan:
+        """Run ``build_fn`` and record its wall-clock cost (telemetry)."""
+        t0 = time.perf_counter()
+        plan = self._build_fn(snapshot)
+        self._last_build_ms = (time.perf_counter() - t0) * 1e3
+        return plan
 
     # -- producer side ------------------------------------------------------
     def observe(self, snapshot: Any) -> None:
@@ -102,16 +208,24 @@ class PlanService:
         returns without blocking — the round for ``t+1`` proceeds while the
         worker rebuilds. With ``rebuild_every=k``, observations that are not
         a multiple of k only advance the counter (no rebuild, no snapshot
-        retained).
+        retained). With ``drift_threshold`` set, the drift statistic decides
+        instead: below threshold the observation only advances the counter.
         """
         self._raise_pending_error()
         self._obs_seen += 1
-        if self._obs_seen % self.rebuild_every != 0:
+        if self.drift_threshold is not None:
+            self._last_drift = self._monitor.drift(snapshot)
+            if not self._last_drift >= self.drift_threshold:
+                return
+        elif self._obs_seen % self.rebuild_every != 0:
             return
         if self.mode == "sync":
-            plan = self._build_fn(snapshot)
+            plan = self._timed_build(snapshot)
+            if self._monitor is not None:
+                self._monitor.rebaseline(snapshot, plan)
             with self._cond:
                 self._completed = VersionedPlan(plan, self._obs_seen)
+                self._rebuilds += 1
             return
         with self._cond:
             if self._closed:
@@ -135,7 +249,9 @@ class PlanService:
                 self._pending = None
                 self._building = True
             try:
-                plan = self._build_fn(snapshot)
+                plan = self._timed_build(snapshot)
+                if self._monitor is not None:
+                    self._monitor.rebaseline(snapshot, plan)
             except BaseException as e:  # surfaced on the next observe/poll/flush
                 with self._cond:
                     self._error = e
@@ -146,6 +262,7 @@ class PlanService:
                 # one worker + latest-wins pending => versions are monotone
                 self._completed = VersionedPlan(plan, version)
                 self._building = False
+                self._rebuilds += 1
                 self._cond.notify_all()
 
     # -- consumer side ------------------------------------------------------
@@ -176,6 +293,24 @@ class PlanService:
         """Total observations recorded (the rebuild-cadence counter)."""
         with self._cond:
             return self._obs_seen
+
+    def rebuilds_done(self) -> int:
+        """Completed plan rebuilds, excluding the version-0 cold start."""
+        with self._cond:
+            return self._rebuilds
+
+    def last_build_ms(self) -> float:
+        """Wall-clock ms of the most recent completed ``build_fn`` call."""
+        return self._last_build_ms
+
+    def last_drift(self) -> float:
+        """Drift statistic of the most recent observation.
+
+        -1.0 until the first observation or when the drift trigger is
+        disabled (``drift_threshold=None``); otherwise the assignment-churn
+        fraction in [0, 1], or ``inf`` for an unmeasurable plan.
+        """
+        return self._last_drift
 
     def restore(self, plan: VersionedPlan, *, obs_seen: int) -> None:
         """Reinstate a checkpointed (plan, observation-counter) state.

@@ -297,6 +297,10 @@ class FederatedServer:
             self.sampler.observe_updates(distinct, updates_flat)
             contributing = distinct
 
+        # rebuild-cost telemetry is read *after* observe_updates: the drift
+        # statistic (and any sync rebuild) for this round happens there
+        plan_build_ms, plan_drift = self.sampler.plan_cost_telemetry()
+
         classes = np.unique(
             np.concatenate([self._client_classes[int(c)] for c in contributing])
         )
@@ -320,6 +324,8 @@ class FederatedServer:
             agg_weights=agg_weights,
             plan_version=plan_version,
             plan_lag_rounds=plan_lag,
+            plan_build_ms=plan_build_ms,
+            plan_drift=plan_drift,
             n_available=n_available,
             n_dropped=n_dropped,
             round_status="degraded" if n_dropped else "ok",

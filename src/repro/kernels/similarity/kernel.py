@@ -12,10 +12,19 @@ accumulates across d-blocks and flushes to the output block on the last
 step. Block sizes default to 128 — MXU-aligned (128×128 systolic tiles) and
 a bounded VMEM footprint: 2·(128·128)·4 B inputs + 128·128·4 B acc ≈ 192 KiB.
 
-Both ops are exact sums over the d axis, which is what lets
-``ops.pairwise_distances_streamed`` call this kernel on (n, d_chunk) slabs
-and add the partial outputs — the zero padding below then only ever applies
-to one slab, not the whole model-sized (n, d) block.
+Two entry points share the kernels:
+
+* :func:`pairwise_kernel` — pads G to tile multiples up front (zero padding
+  is exact for both ops); the right call for sampler-sized ``d`` where the
+  padded copy is cheap.
+* :func:`pairwise_kernel_fused` — **no padding at all**: G stays the exact
+  (n, d) HBM buffer it arrives as (for the planner pipeline, the gradient
+  store's live device array), the grid ceil-divides both axes, and the
+  ragged tail blocks are masked *inside* the kernel with iota row/column
+  masks. The (n, n) accumulator is the kernel's own HBM output — each
+  (i, j) block accumulates across the d-grid in VMEM scratch and flushes
+  once — so the whole d-streamed distance computation is one ``pallas_call``
+  with no host chunk loop and no padded (n, d) block anywhere.
 """
 from __future__ import annotations
 
@@ -93,4 +102,79 @@ def pairwise_kernel(
         scratch_shapes=[pltpu.VMEM((bn, bn), jnp.float32)],
         interpret=interpret,
     )(Gp, Gp)
+    return out[:n, :n]
+
+
+def _masked_fused_kernel(op: str, n: int, d: int, bn: int, bd: int):
+    """Kernel body zeroing the ragged row/column tails of unpadded inputs.
+
+    The last blocks along each axis may read out of bounds (garbage on TPU,
+    implementation-defined elsewhere); the iota masks force those lanes to
+    zero, which is exact for both the Gram and the L1 sum. Row-tail rows of
+    the *output* land in the padded output buffer and are sliced away by the
+    caller, so only the d mask affects retained values.
+    """
+
+    def kernel(a_ref, b_ref, o_ref, acc):
+        @pl.when(pl.program_id(2) == 0)
+        def _init():
+            acc[...] = jnp.zeros_like(acc)
+
+        col = jax.lax.broadcasted_iota(jnp.int32, (bn, bd), 1) + pl.program_id(2) * bd
+        row = jax.lax.broadcasted_iota(jnp.int32, (bn, bd), 0)
+        a = jnp.where((col < d) & (row + pl.program_id(0) * bn < n), a_ref[...], 0.0)
+        b = jnp.where((col < d) & (row + pl.program_id(1) * bn < n), b_ref[...], 0.0)
+        if op == "gram":
+            acc[...] += jax.lax.dot_general(
+                a, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+            )
+        else:
+            acc[...] += jnp.abs(a[:, None, :] - b[None, :, :]).sum(axis=-1)
+
+        @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+        def _flush():
+            o_ref[...] = acc[...]
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_d", "op", "interpret"))
+def pairwise_kernel_fused(
+    G: jnp.ndarray,
+    *,
+    op: str = "gram",
+    block_n: int = 128,
+    block_d: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """G (n, d) f32 -> (n, n), one launch, **no padded copy of G**.
+
+    The full d-streamed accumulation of :func:`pairwise_kernel` as a single
+    ``pallas_call``: the grid ceil-divides (n, n, d), ragged tail blocks are
+    masked in-kernel (:func:`_masked_fused_kernel`), and the only
+    full-width array ever allocated is the (⌈n/bn⌉·bn)² f32 output the
+    accumulator blocks flush into. Replaces the host-side d-chunk Python
+    loop of the streamed backend — the device never holds more than G
+    itself plus the (n, n) accumulator.
+    """
+    if op not in ("gram", "l1"):
+        raise ValueError(f"unknown op {op!r}; choose gram | l1")
+    G = G.astype(jnp.float32)
+    n, d = G.shape
+    bn = min(block_n, max(8, n))
+    bd = min(block_d, max(8, d))
+    gn = -(-n // bn)
+    gd = -(-d // bd)
+    out = pl.pallas_call(
+        _masked_fused_kernel(op, n, d, bn, bd),
+        grid=(gn, gn, gd),
+        in_specs=[
+            pl.BlockSpec((bn, bd), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, bd), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((bn, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((gn * bn, gn * bn), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bn, bn), jnp.float32)],
+        interpret=interpret,
+    )(G, G)
     return out[:n, :n]

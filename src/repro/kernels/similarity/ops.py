@@ -4,14 +4,19 @@ Drop-in replacement for ``repro.core.clustering.similarity.pairwise_distances``
 (numpy) — Algorithm 2 passes ``distance_fn=pallas_pairwise_distances`` to run
 the O(n²d) stage on TPU. On CPU builds, set ``interpret=True`` (tests do).
 
-Two entry points:
+Three entry points:
 
 * :func:`pairwise_distances_device` — one kernel launch over the full
   (n, d) block, padded to tile multiples. Right for sampler-sized ``d``.
-* :func:`pairwise_distances_streamed` — accumulates the Gram / L1 matrix
-  over ``d``-chunks of G, so for model-sized ``d`` only an (n, d_chunk)
-  slab is ever padded (and, for host inputs, ever device-resident) at once;
-  the (n, n) accumulator is the only full-width array.
+* :func:`pairwise_distances_streamed` — the **fused** streamed path: one
+  ``pallas_call`` whose grid ceil-divides the d axis, accumulating the
+  Gram / L1 matrix in per-block VMEM scratch flushed into the HBM (n, n)
+  output. No host chunk loop and no padded (n, d) block — G enters the
+  kernel as the exact buffer it arrives as (for the planner pipeline, the
+  gradient store's live device array).
+* :func:`pairwise_distances_chunked` — the pre-fusion host-side d-chunk
+  Python loop, kept as a parity reference and for host (numpy) G where
+  transferring one (n, d_chunk) slab at a time bounds device memory.
 """
 from __future__ import annotations
 
@@ -19,16 +24,22 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.similarity.kernel import pairwise_kernel
+from repro.kernels.similarity.kernel import pairwise_kernel, pairwise_kernel_fused
 from repro.kernels.similarity.ref import distances_from_gram
 
-#: d above which the "auto" backend switches to the streamed accumulation.
+#: d above which the "auto" backend switches to the fused streamed kernel.
 STREAM_D_THRESHOLD = 8192
 
 
 def _l1_postprocess(d: jnp.ndarray) -> jnp.ndarray:
     d = jnp.where(jnp.eye(d.shape[0], dtype=bool), 0.0, d)
     return jnp.maximum(d, d.T)
+
+
+def _check_measure(measure: str) -> str:
+    if measure not in ("arccos", "l2", "l1"):
+        raise ValueError(f"unknown measure {measure!r}")
+    return "l1" if measure == "l1" else "gram"
 
 
 def pairwise_distances_device(
@@ -59,23 +70,54 @@ def pairwise_distances_streamed(
     d_chunk: int = STREAM_D_THRESHOLD,
     interpret: bool = False,
 ) -> jnp.ndarray:
-    """(n, d) -> (n, n) distances, accumulated over ``d``-chunks of G.
+    """(n, d) -> (n, n) distances in **one fused kernel launch**.
 
-    Both the Gram matrix and the L1 distance are sums over coordinates, so
-    per-chunk kernel outputs add exactly. The kernel pads each (n, chunk)
-    slab independently — the padded (n, d) block of the one-shot path is
-    never materialized. Host (numpy) G is additionally *transferred* one
-    chunk at a time, so the device never holds the full model-sized block.
-    Matches :func:`pairwise_distances_device` to fp32 accumulation-order
-    tolerance.
+    The d-streamed accumulation runs entirely inside the kernel's grid
+    (:func:`~repro.kernels.similarity.kernel.pairwise_kernel_fused`): the
+    (n, n) accumulator lives in HBM as the kernel output, each block
+    accumulating over the d-grid in VMEM scratch, and ragged tails are
+    masked in-kernel — G is never padded and no host chunk loop runs.
+    ``d_chunk`` only caps the per-step tile width (``block_d``), so
+    existing call sites tuned for the chunked path keep their footprint.
+    Matches :func:`pairwise_distances_device` and the numpy reference to
+    fp32 accumulation-order tolerance.
     """
-    if measure not in ("arccos", "l2", "l1"):
-        raise ValueError(f"unknown measure {measure!r}")
+    op = _check_measure(measure)
+    n, d = G.shape
+    if d == 0:
+        raise ValueError("need at least one gradient coordinate")
+    bd = min(block_d, max(int(d_chunk), 1))
+    acc = pairwise_kernel_fused(
+        jnp.asarray(G), op=op, block_n=block_n, block_d=bd, interpret=interpret
+    )
+    if op == "gram":
+        return distances_from_gram(acc, measure)
+    return _l1_postprocess(acc)
+
+
+def pairwise_distances_chunked(
+    G,
+    measure: str = "arccos",
+    *,
+    block_n: int = 128,
+    block_d: int = 128,
+    d_chunk: int = STREAM_D_THRESHOLD,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """(n, d) -> (n, n) distances, accumulated over host-side ``d``-chunks.
+
+    The pre-fusion streamed path, kept as the fused kernel's parity
+    reference. Both the Gram matrix and the L1 distance are sums over
+    coordinates, so per-chunk kernel outputs add exactly. Host (numpy) G is
+    *transferred* one chunk at a time, so the device never holds the full
+    model-sized block — the right path when G does not already live on
+    device.
+    """
+    op = _check_measure(measure)
     n, d = G.shape
     if d == 0:
         raise ValueError("need at least one gradient coordinate")
     d_chunk = max(int(d_chunk), 1)
-    op = "l1" if measure == "l1" else "gram"
     acc = jnp.zeros((n, n), jnp.float32)
     for lo in range(0, d, d_chunk):
         chunk = jnp.asarray(G[:, lo : lo + d_chunk], jnp.float32)
@@ -87,40 +129,60 @@ def pairwise_distances_streamed(
     return _l1_postprocess(acc)
 
 
-def make_distance_fn(*, interpret: bool = False, streamed: bool = False, d_chunk: int = STREAM_D_THRESHOLD):
+def make_distance_fn(
+    *,
+    interpret: bool = False,
+    streamed: bool = False,
+    d_chunk: int = STREAM_D_THRESHOLD,
+    chunked: bool = False,
+    as_numpy: bool = True,
+):
     """Adapter matching ``repro.core.samplers.algorithm2.DistanceFn``.
 
-    ``streamed=True`` always streams; otherwise the one-shot kernel is used
-    up to ``d_chunk`` coordinates and streaming kicks in beyond it, so
-    model-sized ``d`` never pays the padded full-width copy.
+    ``streamed=True`` always takes the fused streamed kernel; otherwise the
+    one-shot kernel is used up to ``d_chunk`` coordinates and the fused
+    kernel kicks in beyond it, so model-sized ``d`` never pays the padded
+    full-width copy. ``chunked=True`` selects the legacy host-side chunk
+    loop instead of the fused kernel (parity reference). ``as_numpy=False``
+    returns the device array untouched — the clustering backends that run
+    on device (``ward_jit``, ``kmeans``) consume it without a host copy.
     """
 
-    def fn(G, measure: str) -> np.ndarray:
-        if streamed or G.shape[1] > d_chunk:
+    def fn(G, measure: str):
+        if chunked:
+            out = pairwise_distances_chunked(
+                G, measure, d_chunk=d_chunk, interpret=interpret
+            )
+        elif streamed or G.shape[1] > d_chunk:
             out = pairwise_distances_streamed(
                 G, measure, d_chunk=d_chunk, interpret=interpret
             )
         else:
             out = pairwise_distances_device(G, measure, interpret=interpret)
-        return np.asarray(out)
+        return np.asarray(out) if as_numpy else out
 
     return fn
 
 
-def resolve_distance_backend(backend: str = "auto"):
+def resolve_distance_backend(backend: str = "auto", *, as_numpy: bool = True):
     """Pick the pairwise-distance backend for Algorithm 2's O(n²d) stage.
 
     * ``"auto"``     — compiled Pallas kernel on TPU, interpret-mode Pallas
       everywhere else — including GPU (same code path, jax-ops execution;
       the kernel's ``pltpu.VMEM`` scratch / mosaic block specs are
-      TPU-only, so there is no compiled GPU path). Streams automatically
-      once ``d`` exceeds :data:`STREAM_D_THRESHOLD`.
+      TPU-only, so there is no compiled GPU path). Switches to the fused
+      streamed kernel once ``d`` exceeds :data:`STREAM_D_THRESHOLD`.
     * ``"pallas"``   — compiled Pallas kernel; TPU only, errors elsewhere.
     * ``"pallas-interpret"`` — interpret-mode Pallas anywhere (tests).
-    * ``"streamed"`` — always the chunked accumulation (compiled on TPU,
-      interpret elsewhere); for model-sized ``d``.
+    * ``"streamed"`` — always the fused streamed kernel (one launch, d-grid
+      in-kernel, no padded (n, d) block); for model-sized ``d``.
+    * ``"chunked"``  — the legacy host-side d-chunk accumulation loop, the
+      fused kernel's parity reference.
     * ``"numpy"``    — the f64 host reference
       (:func:`repro.core.clustering.similarity.pairwise_distances`).
+
+    ``as_numpy=False`` keeps device backends' output on device (the numpy
+    reference is host-side either way).
     """
     if backend == "numpy":
         from repro.core.clustering.similarity import pairwise_distances
@@ -129,12 +191,20 @@ def resolve_distance_backend(backend: str = "auto"):
     if backend == "auto":
         import jax
 
-        return make_distance_fn(interpret=jax.default_backend() != "tpu")
+        return make_distance_fn(
+            interpret=jax.default_backend() != "tpu", as_numpy=as_numpy
+        )
     if backend == "streamed":
         import jax
 
         return make_distance_fn(
-            interpret=jax.default_backend() != "tpu", streamed=True
+            interpret=jax.default_backend() != "tpu", streamed=True, as_numpy=as_numpy
+        )
+    if backend == "chunked":
+        import jax
+
+        return make_distance_fn(
+            interpret=jax.default_backend() != "tpu", chunked=True, as_numpy=as_numpy
         )
     if backend == "pallas":
         import jax
@@ -146,10 +216,10 @@ def resolve_distance_backend(backend: str = "auto"):
                 f"{jax.default_backend()!r}; use 'auto' (interpret-mode "
                 "fallback) or 'pallas-interpret' instead"
             )
-        return make_distance_fn(interpret=False)
+        return make_distance_fn(interpret=False, as_numpy=as_numpy)
     if backend == "pallas-interpret":
-        return make_distance_fn(interpret=True)
+        return make_distance_fn(interpret=True, as_numpy=as_numpy)
     raise ValueError(
         f"unknown distance backend {backend!r}; "
-        "choose from auto | pallas | pallas-interpret | streamed | numpy"
+        "choose from auto | pallas | pallas-interpret | streamed | chunked | numpy"
     )

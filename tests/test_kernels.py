@@ -11,6 +11,7 @@ from repro.kernels.flash_attention.ops import flash_attention_padded
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.similarity.kernel import pairwise_kernel
 from repro.kernels.similarity.ops import (
+    pairwise_distances_chunked,
     pairwise_distances_device,
     pairwise_distances_streamed,
 )
@@ -81,12 +82,17 @@ def test_pairwise_zero_rows_parity_with_numpy_reference(measure):
     ],
 )
 def test_streamed_matches_one_shot_and_numpy(measure, n, d, d_chunk):
-    """d-chunked accumulation must pin to the one-shot kernel AND the f64
-    numpy reference across all three measures (Gram and L1 are both exact
-    sums over coordinate chunks)."""
+    """The fused streamed kernel, the legacy chunked loop, the one-shot
+    kernel and the f64 numpy reference must all agree across all three
+    measures (Gram and L1 are both exact sums over coordinate chunks)."""
     G = RNG.normal(size=(n, d)).astype(np.float32)
     st = np.asarray(
         pairwise_distances_streamed(
+            G, measure, block_n=8, block_d=16, d_chunk=d_chunk, interpret=True
+        )
+    )
+    ch = np.asarray(
+        pairwise_distances_chunked(
             G, measure, block_n=8, block_d=16, d_chunk=d_chunk, interpret=True
         )
     )
@@ -94,15 +100,17 @@ def test_streamed_matches_one_shot_and_numpy(measure, n, d, d_chunk):
         pairwise_distances_device(G, measure, block_n=8, block_d=16, interpret=True)
     )
     np.testing.assert_allclose(st, one, atol=1e-4)
+    np.testing.assert_allclose(st, ch, atol=1e-4)
     np.testing.assert_allclose(st, np_pairwise(G, measure), atol=1e-4)
     assert (np.diag(st) == 0).all()
     np.testing.assert_allclose(st, st.T)
 
 
 @pytest.mark.parametrize("measure", ["arccos", "l1"])
-def test_streamed_never_sees_full_width_block(measure, monkeypatch):
-    """The streamed path must hand the kernel (n, <= d_chunk) slabs only —
-    the padded (n, d) block of the one-shot path is never materialized."""
+def test_chunked_never_sees_full_width_block(measure, monkeypatch):
+    """The chunked parity path must hand the kernel (n, <= d_chunk) slabs
+    only — the padded (n, d) block of the one-shot path is never
+    materialized."""
     from repro.kernels.similarity import ops
 
     widths = []
@@ -115,11 +123,43 @@ def test_streamed_never_sees_full_width_block(measure, monkeypatch):
     monkeypatch.setattr(ops, "pairwise_kernel", spy)
     G = RNG.normal(size=(12, 100)).astype(np.float32)
     out = np.asarray(
-        pairwise_distances_streamed(
+        pairwise_distances_chunked(
             G, measure, block_n=8, block_d=16, d_chunk=32, interpret=True
         )
     )
     assert widths == [32, 32, 32, 4]  # chunked cover of d=100, ragged tail
+    np.testing.assert_allclose(out, np_pairwise(G, measure), atol=1e-4)
+
+
+@pytest.mark.parametrize("measure", ["arccos", "l1"])
+def test_fused_streamed_no_pad_no_chunk_loop(measure, monkeypatch):
+    """The fused path is ONE kernel launch on the unpadded G: no padded
+    (n, d) block is built by the pipeline (the fused kernel receives G at
+    its exact ragged shape — interpret mode's internal block emulation is
+    the emulator's business, a compiled run feeds HBM directly) and no host
+    d-chunk loop runs (the padded one-shot kernel is never called, the
+    fused kernel exactly once), on a shape ragged in both n and d."""
+    from repro.kernels.similarity import ops
+
+    calls = []
+    real_fused = ops.pairwise_kernel_fused
+
+    def fused_spy(G, **kw):
+        calls.append(tuple(G.shape))
+        return real_fused(G, **kw)
+
+    def one_shot_trap(G, **kw):
+        raise AssertionError("fused path fell back to the padded one-shot kernel")
+
+    monkeypatch.setattr(ops, "pairwise_kernel_fused", fused_spy)
+    monkeypatch.setattr(ops, "pairwise_kernel", one_shot_trap)
+    G = RNG.normal(size=(13, 101)).astype(np.float32)  # ragged n AND d
+    out = np.asarray(
+        pairwise_distances_streamed(
+            G, measure, block_n=8, block_d=16, d_chunk=32, interpret=True
+        )
+    )
+    assert calls == [(13, 101)]  # exactly one launch, G handed over unpadded
     np.testing.assert_allclose(out, np_pairwise(G, measure), atol=1e-4)
 
 

@@ -1,5 +1,6 @@
 """Planner subsystem: PlanService semantics, gradient store scatter,
-async-forced-complete ≡ sync determinism, and server plan telemetry."""
+async-forced-complete ≡ sync determinism, drift-triggered rebuilds, and
+server plan telemetry."""
 import threading
 
 import numpy as np
@@ -10,7 +11,7 @@ from repro.core.samplers.algorithm2 import build_plan_algorithm2
 from repro.core.types import SamplingPlan
 from repro.fl import FederatedServer, FLConfig, by_class_shards, flatten_params
 from repro.fl.gradient_store import GradientStore
-from repro.fl.planner import PlanService
+from repro.fl.planner import AssignmentDriftMonitor, PlanService
 from repro.models.simple import init_mlp
 from repro.optim import sgd
 
@@ -277,6 +278,193 @@ def test_server_records_plan_telemetry_static_sampler(dataset):
     assert (srv.history.series("plan_version") == 0).all()
     assert (srv.history.series("plan_lag_rounds") == 0).all()
     s.close()
+
+
+# --------------------------------------------------------------------------
+# drift-triggered rebuilds
+# --------------------------------------------------------------------------
+_DRIFT_LABELS = np.array([0] * 10 + [1] * 10)
+
+
+def _two_cluster_G(flip: int = 0) -> np.ndarray:
+    """20 rows in two well-separated clusters; the first ``flip`` rows of
+    cluster 0 are moved onto cluster 1's center (assignment churn = flip/20)."""
+    G = np.zeros((20, 4), np.float32)
+    G[:10, 0] = 5.0
+    G[10:, 1] = 5.0
+    if flip:
+        G[:flip, 0] = 0.0
+        G[:flip, 1] = 5.0
+    return G
+
+
+def _label_plan(G) -> SamplingPlan:
+    del G
+    return SamplingPlan(r=np.full((4, 20), 0.05), cluster_of=_DRIFT_LABELS)
+
+
+def test_drift_monitor_zero_on_identical_assignments():
+    mon = AssignmentDriftMonitor()
+    mon.rebaseline(_two_cluster_G(), _label_plan(None))
+    assert mon.drift(_two_cluster_G()) == 0.0
+
+
+def test_drift_monitor_monotone_under_label_churn():
+    mon = AssignmentDriftMonitor()
+    mon.rebaseline(_two_cluster_G(), _label_plan(None))
+    drifts = [mon.drift(_two_cluster_G(flip=k)) for k in (0, 2, 5, 10)]
+    assert drifts == [0.0, 0.1, 0.25, 0.5]
+    assert all(a < b for a, b in zip(drifts, drifts[1:]))
+
+
+def test_drift_monitor_unmeasurable_plan_reports_inf():
+    mon = AssignmentDriftMonitor()
+    assert mon.drift(_two_cluster_G()) == float("inf")  # never baselined
+    mon.rebaseline(_two_cluster_G(), SamplingPlan(r=np.full((4, 20), 0.05)))
+    assert mon.drift(_two_cluster_G()) == float("inf")  # no cluster structure
+
+
+def test_drift_trigger_fires_iff_threshold_crossed():
+    svc = PlanService(
+        _label_plan, drift_threshold=0.25, initial_input=_two_cluster_G()
+    )
+    svc.observe(_two_cluster_G(flip=2))  # drift 0.1 < 0.25: no rebuild
+    assert svc.poll() is None
+    assert svc.last_drift() == 0.1
+    assert svc.rebuilds_done() == 0
+    assert svc.telemetry() == (0, 1)  # observation counted, plan unchanged
+    svc.observe(_two_cluster_G(flip=5))  # drift 0.25 >= 0.25: rebuild fires
+    vp = svc.poll()
+    assert vp is not None and vp.version == 2
+    assert svc.last_drift() == 0.25
+    assert svc.rebuilds_done() == 1
+    # rebaselined at the rebuild: the same snapshot now measures zero churn
+    svc.observe(_two_cluster_G(flip=5))
+    assert svc.poll() is None and svc.last_drift() == 0.0
+    assert svc.rebuilds_done() == 1
+
+
+def test_drift_threshold_excludes_fixed_cadence():
+    with pytest.raises(ValueError, match="alternative rebuild schedules"):
+        PlanService(
+            _label_plan,
+            drift_threshold=0.1,
+            rebuild_every=2,
+            initial_input=_two_cluster_G(),
+        )
+    with pytest.raises(ValueError, match="drift_threshold must be >= 0"):
+        PlanService(_label_plan, drift_threshold=-0.5, initial_input=_two_cluster_G())
+
+
+def test_fixed_cadence_rebuild_every_remains_default(dataset):
+    """rebuild_every cadence is untouched by the drift machinery: every k-th
+    observation rebuilds, the rest only advance the counter (PR 4's pin)."""
+    pop = dataset.population
+    params = init_mlp((16, 32, 10), seed=1)
+    d = int(flatten_params(params).shape[0])
+    s = Algorithm2Sampler(pop, 10, update_dim=d, seed=0, rebuild_every=2)
+    srv = _run_server(dataset, s, rounds=4)
+    np.testing.assert_array_equal(
+        srv.history.series("plan_version"), np.array([0, 0, 2, 2])
+    )
+    assert (srv.history.series("plan_drift") == -1.0).all()  # trigger off
+
+
+def test_drift_zero_threshold_matches_fixed_cadence_training(dataset):
+    """Acceptance: drift-triggered mode on a static population does <= the
+    rebuilds of the equivalent fixed cadence while matching its accuracy.
+    threshold=0.0 fires on every observation (drift >= 0 always), so the
+    rebuild schedule — and therefore the whole training trajectory — is
+    identical to rebuild_every=1."""
+    pop = dataset.population
+    params = init_mlp((16, 32, 10), seed=1)
+    d = int(flatten_params(params).shape[0])
+    a = Algorithm2Sampler(pop, 10, update_dim=d, seed=0)  # fixed cadence 1
+    b = Algorithm2Sampler(pop, 10, update_dim=d, seed=0, drift_threshold=0.0)
+    srv_a = _run_server(dataset, a)
+    srv_b = _run_server(dataset, b)
+    assert b.plan_service.rebuilds_done() <= a.plan_service.rebuilds_done()
+    np.testing.assert_array_equal(
+        srv_a.history.series("plan_version"), srv_b.history.series("plan_version")
+    )
+    np.testing.assert_allclose(
+        srv_a.history.series("train_loss"),
+        srv_b.history.series("train_loss"),
+        rtol=1e-4, atol=1e-6,
+    )
+    np.testing.assert_allclose(
+        np.asarray(flatten_params(srv_a.params)),
+        np.asarray(flatten_params(srv_b.params)),
+        rtol=1e-4, atol=1e-5,
+    )
+    # the drift statistic rode along in telemetry
+    assert (srv_b.history.series("plan_drift") >= 0.0).all()
+    assert (srv_a.history.series("plan_drift") == -1.0).all()
+
+
+def test_drift_high_threshold_skips_rebuilds(dataset):
+    """A threshold no realizable churn reaches keeps the cold-start plan —
+    strictly fewer rebuilds than any fixed cadence."""
+    pop = dataset.population
+    params = init_mlp((16, 32, 10), seed=1)
+    d = int(flatten_params(params).shape[0])
+    s = Algorithm2Sampler(pop, 10, update_dim=d, seed=0, drift_threshold=1.5)
+    srv = _run_server(dataset, s, rounds=4)
+    assert s.plan_service.rebuilds_done() == 0
+    assert (srv.history.series("plan_version") == 0).all()
+    assert np.isfinite(srv.history.series("train_loss")).all()
+
+
+def test_server_records_plan_cost_telemetry(dataset):
+    pop = dataset.population
+    params = init_mlp((16, 32, 10), seed=1)
+    d = int(flatten_params(params).shape[0])
+    srv = _run_server(
+        dataset, Algorithm2Sampler(pop, 10, update_dim=d, seed=0), rounds=3
+    )
+    assert (srv.history.series("plan_build_ms") > 0).all()
+    assert (srv.history.series("plan_drift") == -1.0).all()
+
+
+# --------------------------------------------------------------------------
+# device-resident rebuild path
+# --------------------------------------------------------------------------
+def test_algorithm2_fused_device_rebuild_no_padded_block(monkeypatch):
+    """The fused algorithm2 path never materializes a padded (n, d) block or
+    runs the host d-chunk loop: G reaches the fused kernel as the store's
+    exact device array, exactly once per rebuild, and the one-shot (padding)
+    kernel is never invoked."""
+    jax = pytest.importorskip("jax")
+    from repro.kernels.similarity import ops
+
+    calls = []
+    real_fused = ops.pairwise_kernel_fused
+
+    def spy(G, **kw):
+        calls.append((isinstance(G, jax.Array), tuple(G.shape)))
+        return real_fused(G, **kw)
+
+    def trap(*a, **kw):
+        raise AssertionError("padded one-shot kernel ran on the fused path")
+
+    monkeypatch.setattr(ops, "pairwise_kernel_fused", spy)
+    monkeypatch.setattr(ops, "pairwise_kernel", trap)
+    monkeypatch.setattr(
+        ops, "pairwise_distances_chunked", lambda *a, **kw: trap()
+    )
+
+    s = Algorithm2Sampler(
+        POP, 5, update_dim=8, seed=0, distance_fn="streamed", clusterer="ward_jit"
+    )
+    rng = np.random.default_rng(0)
+    ids = rng.choice(POP.n_clients, size=6, replace=False)
+    s.observe_updates(ids, rng.normal(size=(6, 8)).astype(np.float32))
+    # initial build + one observed rebuild, each exactly one fused launch
+    assert len(calls) == 2
+    for on_device, shape in calls:
+        assert on_device  # G stayed device-resident end-to-end
+        assert shape == (POP.n_clients, 8)  # exact ragged shape — no padding
+    validate_plan(s.plan, POP)
 
 
 def test_free_running_async_server_stays_valid(dataset):
