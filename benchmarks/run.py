@@ -23,6 +23,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   bench_round_engine   — batched on-device round engine vs compat loop
   bench_engine_sharded — mesh-sharded engine: per-device staged bytes sweep
   bench_async_planner  — async re-clustering planner + streamed similarity
+  bench_store_scale    — sketched GradientStore: bytes/scatter/rebuild at scale
 """
 from __future__ import annotations
 
@@ -40,6 +41,7 @@ from benchmarks import (
     bench_kernels,
     bench_round_engine,
     bench_sampler_cost,
+    bench_store_scale,
     beyond_paper,
     fig1_controlled,
     fig2_dirichlet,
@@ -52,6 +54,7 @@ MODULES = [
     ("bench_round_engine", bench_round_engine),
     ("bench_engine_sharded", bench_engine_sharded),
     ("bench_async_planner", bench_async_planner),
+    ("bench_store_scale", bench_store_scale),
     ("bench_fl_collectives", bench_fl_collectives),
     ("bench_kernels", bench_kernels),
     ("bench_dryrun_roofline", bench_dryrun_roofline),
@@ -118,12 +121,14 @@ def list_registered() -> None:
     from repro.fl.engine import ENGINES
     from repro.fl.experiment import DATASETS
     from repro.fl.population import POPULATIONS
+    from repro.kernels.sketch import SKETCHERS
 
     print("samplers:    " + " ".join(SAMPLERS.names()))
     print("engines:     " + " ".join(ENGINES.names()))
     print("datasets:    " + " ".join(DATASETS.names()))
     print("populations: " + " ".join(POPULATIONS.names()))
     print("clusterers:  " + " ".join(CLUSTERERS.names()))
+    print("sketchers:   " + " ".join(SKETCHERS.names()))
     print("benchmarks:  " + " ".join(name for name, _ in MODULES))
 
 

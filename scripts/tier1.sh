@@ -18,6 +18,7 @@ python -m benchmarks.bench_round_engine --smoke
 python -m benchmarks.bench_engine_sharded --smoke
 python -m benchmarks.bench_async_planner --smoke --drift
 python -m benchmarks.bench_service_churn --smoke
+python -m benchmarks.bench_store_scale --smoke
 
 echo "== tier-1: fused streamed kernel parity vs numpy (ragged-chunk shape) =="
 # 13x101 is ragged against both the 8-row and 16-column tiles AND the
@@ -34,6 +35,34 @@ for measure in ("arccos", "l2", "l1"):
         G, measure, block_n=8, block_d=16, d_chunk=32, interpret=True))
     np.testing.assert_allclose(fused, ref, atol=1e-4, err_msg=measure)
 print("fused streamed == numpy reference (13x101 ragged, all measures)")
+EOF
+
+echo "== tier-1: identity-sketch == legacy store bit-parity gate =="
+# sketch="identity" engages the sketch stage yet must train byte-for-byte
+# like the store with no sketch stage at all (plan_build_ms is wall-clock
+# telemetry and is normalized out, exactly as in tests/test_service_resume)
+python - <<'EOF'
+import json
+from repro.fl.experiment import ExperimentSpec, build_experiment
+
+BASE = {
+    "data": {"name": "by_class_shards",
+             "options": {"n_classes": 4, "clients_per_class": 2, "dim": 8,
+                          "train_per_client": 40, "test_per_client": 8, "seed": 0}},
+    "sampler": {"name": "algorithm2", "m": 4, "seed": 3},
+    "train": {"n_rounds": 4, "n_local_steps": 3, "batch_size": 10, "hidden": [16]},
+}
+
+def run(planner):
+    spec = ExperimentSpec.from_dict({**BASE, **({"planner": planner} if planner else {})})
+    with build_experiment(spec) as srv:
+        recs = json.loads(srv.run().to_json())
+    for r in recs:
+        r["plan_build_ms"] = -1.0
+    return json.dumps(recs)
+
+assert run(None) == run({"sketch": "identity"}), "identity sketch broke bit-parity"
+print("identity sketch == legacy store (bit-identical history)")
 EOF
 
 echo "== tier-1: sweep smoke (2 cells x 2 seeds, then resume on the same store) =="

@@ -145,6 +145,9 @@ class Algorithm2Sampler(ClusteredSampler):
         planner: str = "sync",
         rebuild_every: int = 1,
         drift_threshold: Optional[float] = None,
+        sketch: Optional[str] = None,
+        sketch_dim: Optional[int] = None,
+        store_mesh_spec=None,
     ):
         """``staleness_decay`` < 1 is a beyond-paper extension: every round,
         stored representative gradients shrink by this factor, so clients
@@ -177,7 +180,18 @@ class Algorithm2Sampler(ClusteredSampler):
         replaces the fixed cadence with the planner's measured trigger: a
         rebuild runs only when the assignment churn of the fresh gradients
         against the live plan's clusters reaches the threshold (see
-        :class:`repro.fl.planner.AssignmentDriftMonitor`)."""
+        :class:`repro.fl.planner.AssignmentDriftMonitor`).
+
+        ``sketch`` / ``sketch_dim`` attach a device-side sketch stage to the
+        gradient store (a :data:`repro.kernels.sketch.SKETCHERS` name —
+        ``"srp"``, ``"countsketch"``, or ``"identity"`` for the exact
+        bit-for-bit legacy path): the engine's (c, d) device updates are
+        compressed to (c, d') *before* scatter, so the resident store, the
+        O(n²·d) similarity stage and the drift monitor's centroids all live
+        in sketch space. The sketch is seeded with the sampler ``seed``, so
+        a checkpointed store restores against the identical projection.
+        ``store_mesh_spec`` shards the store's client axis over a device
+        mesh (the PR 2 engine mesh convention)."""
         from repro.fl.gradient_store import GradientStore
         from repro.fl.planner import PlanService
 
@@ -187,7 +201,13 @@ class Algorithm2Sampler(ClusteredSampler):
         self._clusterer = clusterer
         self.staleness_decay = float(staleness_decay)
         self._store = GradientStore(
-            population.n_clients, update_dim, staleness_decay=staleness_decay
+            population.n_clients,
+            update_dim,
+            staleness_decay=staleness_decay,
+            sketch=sketch,
+            sketch_dim=sketch_dim,
+            sketch_seed=seed,
+            mesh_spec=store_mesh_spec,
         )
 
         def build(G) -> SamplingPlan:
@@ -212,7 +232,12 @@ class Algorithm2Sampler(ClusteredSampler):
 
     @property
     def representative_gradients(self) -> np.ndarray:
+        """Host copy of the resident G — (n, d'), sketch space if sketched."""
         return self._store.asnumpy()
+
+    @property
+    def gradient_store(self):
+        return self._store
 
     @property
     def plan_service(self):
@@ -277,10 +302,33 @@ class Algorithm2Sampler(ClusteredSampler):
         version, _ = self._service.telemetry()
         meta["plan_version"] = version
         meta["obs_seen"] = self._service.observations_seen()
+        # the sketch identity rides along so a restore into a differently-
+        # sketched store fails loudly instead of mixing sketch spaces
+        sk = self._store.sketch
+        meta["sketch"] = None if sk is None else sk.name
+        meta["sketch_dim"] = None if sk is None else sk.d_out
+        meta["sketch_seed"] = None if sk is None else sk.seed
         return meta
 
     def load_state(self, meta: dict, arrays: dict) -> None:
         super().load_state(meta, arrays)  # rng + the exact live plan
+        sk = self._store.sketch
+        have = (
+            (None if sk is None else sk.name),
+            (None if sk is None else sk.d_out),
+            (None if sk is None else sk.seed),
+        )
+        want = (
+            meta.get("sketch"),
+            meta.get("sketch_dim"),
+            meta.get("sketch_seed"),
+        )
+        if want != have:
+            raise ValueError(
+                f"checkpointed sketch state {want} != this sampler's sketch "
+                f"{have}: a (name, dim, seed) mismatch would scatter new "
+                "updates into a different sketch space than the restored G"
+            )
         self._store.load(arrays["store_G"])
         from repro.fl.planner import VersionedPlan
 

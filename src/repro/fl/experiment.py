@@ -150,15 +150,23 @@ class PlannerSpec:
     ``clusterer`` names the grouping backend from
     :data:`repro.core.clustering.backends.CLUSTERERS` (``"ward"`` — the
     paper-faithful default, ``"ward_jit"``, ``"kmeans"``, or anything
-    ``register_clusterer`` added). Ignored by plan-free samplers only when
-    it is the default — asking a planless scheme for an async planner is an
-    error, not a silent no-op.
+    ``register_clusterer`` added). ``sketch``/``sketch_dim`` attach the
+    gradient store's device-side sketch stage (a
+    :data:`repro.kernels.sketch.SKETCHERS` name — ``"srp"``,
+    ``"countsketch"``, or ``"identity"`` for the exact legacy path; a
+    compressing sketch needs ``sketch_dim`` = d′), so the store, the
+    similarity stage and the drift monitor all scale in d′ instead of the
+    model dimension. Ignored by plan-free samplers only when it is the
+    default — asking a planless scheme for an async planner is an error,
+    not a silent no-op.
     """
 
     mode: str = "sync"
     rebuild_every: int = 1
     clusterer: str = "ward"
     drift_threshold: Optional[float] = None
+    sketch: Optional[str] = None
+    sketch_dim: Optional[int] = None
 
     def __post_init__(self):
         if self.mode not in ("sync", "async"):
@@ -175,6 +183,14 @@ class PlannerSpec:
                     "drift_threshold and rebuild_every are alternative rebuild "
                     f"schedules; got both (rebuild_every={self.rebuild_every})"
                 )
+        if self.sketch_dim is not None:
+            if self.sketch is None:
+                raise ValueError(
+                    f"sketch_dim={self.sketch_dim} without a sketch; set "
+                    "PlannerSpec.sketch (e.g. 'srp') or drop sketch_dim"
+                )
+            if self.sketch_dim < 1:
+                raise ValueError(f"sketch_dim must be >= 1, got {self.sketch_dim}")
 
     @property
     def is_default(self) -> bool:
@@ -183,6 +199,8 @@ class PlannerSpec:
             and self.rebuild_every == 1
             and self.clusterer == "ward"
             and self.drift_threshold is None
+            and self.sketch is None
+            and self.sketch_dim is None
         )
 
     @classmethod
@@ -195,6 +213,8 @@ class PlannerSpec:
             "rebuild_every": self.rebuild_every,
             "clusterer": self.clusterer,
             "drift_threshold": self.drift_threshold,
+            "sketch": self.sketch,
+            "sketch_dim": self.sketch_dim,
         }
 
 
@@ -394,13 +414,17 @@ def build_sampler(
     *,
     planner: Optional[PlannerSpec] = None,
     update_dim: Optional[int] = None,
+    store_mesh_spec=None,
 ):
     """Resolve a :class:`SamplerSpec` through ``SAMPLERS`` and construct it.
 
     ``planner`` feeds the scheme's plan service (only schemes that take a
     ``planner`` kwarg accept a non-default one); ``update_dim`` is the
     flattened model size handed to similarity-based schemes unless the spec
-    pins its own in ``options``.
+    pins its own in ``options``. ``store_mesh_spec`` (the engine's mesh, in
+    practice) shards the scheme's gradient store over its client axis when
+    the scheme has one — silently skipped otherwise, since the mesh is an
+    engine knob rather than a sampling-scheme choice.
     """
     spec = SamplerSpec.from_dict(spec) if isinstance(spec, dict) else spec
     cls = SAMPLERS.get(spec.name)
@@ -432,6 +456,16 @@ def build_sampler(
                     f"PlannerSpec.drift_threshold={planner.drift_threshold} "
                     "would be silently ignored"
                 )
+            if "sketch" in params:
+                kwargs.setdefault("sketch", planner.sketch)
+                if "sketch_dim" in params:
+                    kwargs.setdefault("sketch_dim", planner.sketch_dim)
+            elif planner.sketch is not None:
+                raise ValueError(
+                    f"sampler {spec.name!r} has no gradient-store sketch "
+                    f"stage; PlannerSpec.sketch={planner.sketch!r} would be "
+                    "silently ignored"
+                )
         elif not planner.is_default:
             raise ValueError(
                 f"sampler {spec.name!r} has no plan service; a non-default "
@@ -446,6 +480,8 @@ def build_sampler(
                 "build_sampler or set it in SamplerSpec.options"
             )
         kwargs["update_dim"] = int(update_dim)
+    if store_mesh_spec is not None and "store_mesh_spec" in params:
+        kwargs.setdefault("store_mesh_spec", store_mesh_spec)
     return cls(population, spec.m, **kwargs)
 
 
@@ -490,7 +526,11 @@ def build_experiment(
     params = init_mlp((int(feat_shape[0]), *tr.hidden, n_classes), seed=tr.model_seed)
     update_dim = int(flatten_params(params).shape[0])
     sampler = build_sampler(
-        spec.sampler, ds.population, planner=spec.planner, update_dim=update_dim
+        spec.sampler,
+        ds.population,
+        planner=spec.planner,
+        update_dim=update_dim,
+        store_mesh_spec=spec.engine.mesh_spec,
     )
     cfg = FLConfig(
         n_rounds=tr.n_rounds,

@@ -12,16 +12,34 @@ per-round feedback in as a *scatter*:
 * padded / invalid slots are handled by the scatter itself: any id >=
   ``n_clients`` is dropped (``mode="drop"``), so callers can pass a
   fixed-shape slot block with sentinel ids instead of slicing on host.
+  Duplicate ids are **last-write-wins** on both backends — the jax path
+  scatters host-deduplicated rows and the numpy path assigns them, so the
+  semantics are pinned rather than left to backend scatter ordering.
+
+Scaling past sampler-sized models is the *sketch* stage (``sketch=...``):
+the engine's (c, d) device updates are compressed to (c, d') by a
+:data:`repro.kernels.sketch.SKETCHERS` entry **before** scatter, so the
+resident buffer is (n, d') f32 and every downstream consumer — the fused
+similarity kernel's d-grid, the jitted clusterers, the drift monitor's
+centroids — shrinks by d/d'. ``sketch="identity"`` keeps today's exact
+path bit-for-bit; ``sketch=None`` (default) attaches no sketch stage at
+all. With ``mesh_spec`` the store's client axis is sharded over the mesh's
+batch axes (the PR 2 engine mesh), the scatter is sharding-constrained in
+place, and :meth:`gather_rows` all-gathers only the rows a rebuild
+actually touches.
 
 jax arrays are immutable, so :meth:`snapshot` is O(1) and yields a
 consistent view even while an async planner worker reads it concurrently
 with the next round's scatter (see ``repro.fl.planner``).
 
 jax is imported lazily; ``backend="numpy"`` (or jax being absent) selects a
-host f32 fallback with identical semantics, keeping ``repro.core`` samplers
-constructible in jax-free environments.
+host f32 fallback with identical semantics (sketches run through their
+numpy reference), keeping ``repro.core`` samplers constructible in
+jax-free environments.
 """
 from __future__ import annotations
+
+from typing import Optional, Union
 
 import numpy as np
 
@@ -35,12 +53,29 @@ def _jnp():
     return jnp
 
 
-class GradientStore:
-    """(n_clients, d) f32 buffer of latest representative gradients.
+def _dedupe_last(ids: np.ndarray) -> np.ndarray:
+    """Indices of the *last* occurrence of each id, in stable id-order.
 
+    Pins last-write-wins for duplicate client ids independent of either
+    backend's scatter ordering. Returns ``slice(None)`` (no-op indexer)
+    when ids are already unique, so the common path — the server feeds the
+    round's *distinct* clients — keeps its array shapes (and jit cache
+    keys) untouched.
+    """
+    uniq, last_of_reversed = np.unique(ids[::-1], return_index=True)
+    if uniq.size == ids.size:
+        return slice(None)
+    return ids.size - 1 - last_of_reversed
+
+
+class GradientStore:
+    """(n_clients, dim) f32 buffer of latest representative gradients.
+
+    ``dim`` is the *resident* width: ``update_dim`` when no sketch (or the
+    identity sketch) is attached, the sketcher's ``d_out`` otherwise.
     ``update`` implements exactly the seed sampler's semantics: decay the
     whole buffer by ``staleness_decay`` (1.0 = paper behaviour, a no-op),
-    then overwrite the observed clients' rows.
+    sketch the incoming rows, then overwrite the observed clients' rows.
     """
 
     def __init__(
@@ -50,36 +85,106 @@ class GradientStore:
         *,
         staleness_decay: float = 1.0,
         backend: str = "auto",
+        sketch: Union[str, None, object] = None,
+        sketch_dim: Optional[int] = None,
+        sketch_seed: int = 0,
+        mesh_spec=None,
     ):
         if backend not in ("auto", "jax", "numpy"):
             raise ValueError(f"unknown gradient-store backend {backend!r}")
+        from repro.kernels.sketch.ops import resolve_sketcher
+
         self.n_clients = int(n_clients)
         self.update_dim = int(update_dim)
         self.staleness_decay = float(staleness_decay)
+        self.sketch = resolve_sketcher(
+            sketch, self.update_dim, sketch_dim, seed=sketch_seed
+        )
+        #: resident row width — d' under a compressing sketch, d otherwise
+        self.dim = self.update_dim if self.sketch is None else self.sketch.d_out
         jnp = _jnp() if backend in ("auto", "jax") else None
         if backend == "jax" and jnp is None:
             raise RuntimeError("gradient-store backend 'jax' requires jax")
         self._jnp = jnp
+        self._mesh = None
+        self._sharding = None
         if jnp is not None:
             import jax
+
+            if mesh_spec is not None:
+                from jax.sharding import NamedSharding, PartitionSpec as P
+
+                from repro.launch.mesh import (
+                    data_parallel_degree,
+                    leading_batch_spec,
+                    resolve_fl_mesh,
+                )
+
+                mesh = resolve_fl_mesh(mesh_spec)
+                if mesh is not None:
+                    self._mesh = mesh
+                    # shard the client axis only when it divides the mesh's
+                    # data-parallel degree (the engine's staging convention);
+                    # replicate otherwise rather than erroring
+                    if self.n_clients % data_parallel_degree(mesh) == 0:
+                        self._sharding = NamedSharding(
+                            mesh, leading_batch_spec(mesh, 2)
+                        )
+                    else:
+                        self._sharding = NamedSharding(mesh, P())
+                    self._replicated = NamedSharding(mesh, P())
+
+            sharding = self._sharding
 
             def scatter(G, ids, vals):
                 if self.staleness_decay < 1.0:
                     G = G * np.float32(self.staleness_decay)
-                return G.at[ids].set(vals.astype(jnp.float32), mode="drop")
+                G = G.at[ids].set(vals.astype(jnp.float32), mode="drop")
+                if sharding is not None:
+                    G = jax.lax.with_sharding_constraint(G, sharding)
+                return G
+
+            def gather(G, ids):
+                rows = jnp.take(G, ids, axis=0)
+                if sharding is not None:
+                    rows = jax.lax.with_sharding_constraint(rows, self._replicated)
+                return rows
 
             self._scatter = jax.jit(scatter)
-            self._G = jnp.zeros((self.n_clients, self.update_dim), jnp.float32)
+            self._gather = jax.jit(gather)
+            G0 = jnp.zeros((self.n_clients, self.dim), jnp.float32)
+            self._G = (
+                jax.device_put(G0, self._sharding) if self._sharding is not None else G0
+            )
         else:
+            if mesh_spec is not None:
+                raise RuntimeError(
+                    "GradientStore(mesh_spec=...) needs the jax backend; the "
+                    "numpy fallback has no device mesh to shard over"
+                )
             self._scatter = None
-            self._G = np.zeros((self.n_clients, self.update_dim), np.float32)
+            self._G = np.zeros((self.n_clients, self.dim), np.float32)
+
+    @property
+    def nbytes(self) -> int:
+        """Resident bytes of the (n_clients, dim) f32 buffer."""
+        return self.n_clients * self.dim * 4
+
+    def _apply_sketch(self, updates):
+        if self.sketch is None:
+            return updates
+        if self._jnp is None:
+            return self.sketch.reference(updates)
+        return self.sketch(updates)
 
     def update(self, client_ids, updates) -> None:
-        """Scatter ``updates`` (c, d) into rows ``client_ids`` (c,).
+        """Scatter ``updates`` (c, update_dim) into rows ``client_ids`` (c,).
 
         ``updates`` may be a device array (the engine's round output) or
-        numpy; ids at or beyond ``n_clients`` are dropped, which is how
-        fixed-shape padded slot blocks mark unused rows.
+        numpy; the sketch stage (if any) runs on it *before* scatter, on
+        device for device inputs. Ids at or beyond ``n_clients`` are
+        dropped, which is how fixed-shape padded slot blocks mark unused
+        rows; duplicate ids resolve last-write-wins on both backends.
         """
         if tuple(updates.shape)[1:] != (self.update_dim,):
             raise ValueError(
@@ -90,28 +195,78 @@ class GradientStore:
                 f"{len(client_ids)} ids for {updates.shape[0]} update rows"
             )
         if self._jnp is not None:
-            ids = self._jnp.asarray(np.asarray(client_ids, np.int32))
-            self._G = self._scatter(self._G, ids, self._jnp.asarray(updates))
+            ids = np.asarray(client_ids, np.int32)
+            take = _dedupe_last(ids)
+            vals = self._apply_sketch(self._jnp.asarray(updates))
+            if not isinstance(take, slice):
+                ids, vals = ids[take], vals[np.asarray(take)]
+            self._G = self._scatter(self._G, self._jnp.asarray(ids), vals)
         else:
             ids = np.asarray(client_ids, np.int64)
+            vals = np.asarray(self._apply_sketch(np.asarray(updates)), np.float32)
+            take = _dedupe_last(ids)
+            if not isinstance(take, slice):
+                ids, vals = ids[take], vals[take]
             keep = ids < self.n_clients
             if self.staleness_decay < 1.0:
                 self._G = self._G * np.float32(self.staleness_decay)
-            self._G[ids[keep]] = np.asarray(updates, np.float32)[keep]
+            self._G[ids[keep]] = vals[keep]
 
     def snapshot(self):
         """The current G — an immutable device array (or a numpy copy)."""
         return self._G if self._jnp is not None else self._G.copy()
 
+    def gather_rows(self, client_ids):
+        """Only the requested rows, replicated across the mesh.
+
+        The sharded-store read path for partial rebuilds: a rebuild that
+        touches ``c`` rows all-gathers (c, dim) — not the whole (n, dim)
+        buffer — across the client-axis shards. Without a mesh this is a
+        plain device (or host) row gather.
+        """
+        if self._jnp is not None:
+            ids = self._jnp.asarray(np.asarray(client_ids, np.int32))
+            return self._gather(self._G, ids)
+        return self._G[np.asarray(client_ids, np.int64)].copy()
+
     def load(self, G) -> None:
-        """Replace the buffer with a checkpointed (n_clients, d) f32 state."""
-        G = np.asarray(G, np.float32)
-        if G.shape != (self.n_clients, self.update_dim):
+        """Replace the buffer with a checkpointed (n_clients, dim) state.
+
+        Device arrays are adopted *directly* — no host round-trip — after a
+        dtype check (a large sketched store must restore where it lives);
+        host arrays are cast to f32 as before. Under a mesh the restored
+        buffer is re-placed onto the store's client-axis sharding.
+        """
+        if tuple(G.shape) != (self.n_clients, self.dim):
             raise ValueError(
-                f"checkpointed G shape {G.shape} != "
-                f"({self.n_clients}, {self.update_dim})"
+                f"checkpointed G shape {tuple(G.shape)} != "
+                f"({self.n_clients}, {self.dim})"
             )
-        self._G = self._jnp.asarray(G) if self._jnp is not None else G.copy()
+        if self._jnp is not None and not isinstance(G, np.ndarray):
+            import jax
+
+            G = self._jnp.asarray(G)  # no-op for device arrays
+            if G.dtype != self._jnp.float32:
+                raise ValueError(
+                    f"device-resident G must be float32, got {G.dtype}; cast "
+                    "on device (or pass a host array) before load()"
+                )
+            self._G = (
+                jax.device_put(G, self._sharding)
+                if self._sharding is not None
+                else G
+            )
+            return
+        G = np.asarray(G, np.float32)
+        if self._jnp is None:
+            self._G = G.copy()
+            return
+        import jax
+
+        dev = self._jnp.asarray(G)
+        self._G = (
+            jax.device_put(dev, self._sharding) if self._sharding is not None else dev
+        )
 
     def asnumpy(self) -> np.ndarray:
         """Host f32 copy, for inspection and host-side reference builds."""

@@ -1,0 +1,8 @@
+from repro.kernels.sketch.ops import (
+    SKETCHERS,
+    Sketcher,
+    register_sketcher,
+    resolve_sketcher,
+)
+
+__all__ = ["SKETCHERS", "Sketcher", "register_sketcher", "resolve_sketcher"]

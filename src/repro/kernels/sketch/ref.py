@@ -1,0 +1,120 @@
+"""Host reference for the gradient sketch + the shared sign/bucket hash.
+
+The sketch stage compresses a client's representative gradient from ``d``
+model coordinates to ``d_prime`` sketch coordinates *before* it is ever
+scattered into the gradient store, so everything downstream of the engine —
+store memory, the fused similarity kernel's d-grid, the drift monitor's
+centroids — scales in ``d_prime`` instead of ``d``. Two constructions, both
+unbiased for inner products (E[<s(x), s(y)>] = <x, y>), which is what the
+arccos / L2 plan distances are built from:
+
+* **signed random projection** (``srp``): y = X @ S with S a (d, d_prime)
+  Rademacher matrix scaled by 1/sqrt(d_prime). S is *never materialized*:
+  each (block_d, d_prime) block is regenerated on the fly from a
+  counter-based integer hash of (seed, coordinate, output column), so the
+  projection costs O(block_d · d_prime) memory however large d is, and the
+  same seed always regenerates the identical matrix — on device, on host,
+  and after a checkpoint restore.
+* **counting sketch** (``countsketch``): each input coordinate k is hashed
+  to one bucket h(k) with a sign s(k); y[:, h(k)] += s(k) · X[:, k]. O(d)
+  state (the bucket/sign vectors), one scatter-add, no matmul.
+
+Everything here is pure numpy and hash-deterministic; the jitted / Pallas
+device paths (:mod:`repro.kernels.sketch.kernel`, ``ops``) reuse the same
+hash helpers via the ``xp`` parameter so device and host agree on *which*
+random matrix they apply (outputs match to f32 accumulation tolerance).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+# murmur3-style multiplicative mixing constants (uint32 arithmetic, wraps)
+_C1 = 0x85EBCA6B
+_C2 = 0xC2B2AE35
+_K_SALT = 0x9E3779B1  # golden-ratio odd constants decorrelate the
+_J_SALT = 0x7FEB352D  # coordinate and output-column streams
+_SEED_SALT = 0x165667B1
+
+
+def _mix32(h, xp):
+    """murmur3 fmix32 finalizer over a uint32 array (numpy or jnp)."""
+    h = h ^ (h >> 16)
+    h = h * xp.uint32(_C1)
+    h = h ^ (h >> 13)
+    h = h * xp.uint32(_C2)
+    h = h ^ (h >> 16)
+    return h
+
+
+def _hash_coords(k, j, seed: int, xp):
+    """Deterministic uint32 hash of (coordinate k, output column j, seed).
+
+    ``k`` and ``j`` are broadcast-compatible uint32 arrays; the result is
+    the per-entry key both sketch constructions draw their bits from.
+    """
+    s = xp.uint32((seed * _SEED_SALT) & 0xFFFFFFFF)
+    h = (k * xp.uint32(_K_SALT)) ^ (j * xp.uint32(_J_SALT)) ^ s
+    return _mix32(h, xp)
+
+
+def srp_sign_block(seed: int, k0: int, bd: int, d_prime: int, d_total: int, xp=np):
+    """One (bd, d_prime) f32 block of the scaled Rademacher matrix S.
+
+    Rows are global coordinates ``k0 .. k0+bd``; rows at or beyond
+    ``d_total`` are zeroed (the ragged-tail mask the blockwise apply and
+    the Pallas kernel share). Entries are ±1/sqrt(d_prime).
+    """
+    k = (xp.arange(bd, dtype=xp.uint32) + xp.uint32(k0))[:, None]
+    j = xp.arange(d_prime, dtype=xp.uint32)[None, :]
+    return srp_sign_entries(k, j, seed, d_total, d_prime, xp)
+
+
+def srp_sign_entries(k, j, seed: int, d_total: int, d_prime: int, xp=np):
+    """Sign entries for explicit (k, j) uint32 index arrays (kernel path)."""
+    h = _hash_coords(k, j, seed, xp)
+    scale = xp.float32(1.0 / np.sqrt(float(d_prime)))
+    sign = xp.where((h & xp.uint32(1)) == 1, scale, -scale)
+    return xp.where(k < xp.uint32(d_total), sign, xp.float32(0.0))
+
+
+def countsketch_params(d: int, d_prime: int, seed: int, xp=np):
+    """(bucket, sign) vectors of the seeded counting sketch.
+
+    ``bucket`` is (d,) int32 in [0, d_prime); ``sign`` is (d,) f32 ±1.
+    Both are pure functions of (d, d_prime, seed) — regenerating after a
+    checkpoint restore yields the identical sketch.
+    """
+    k = xp.arange(d, dtype=xp.uint32)
+    h = _hash_coords(k, xp.uint32(0), seed, xp)
+    bucket = (h >> 1) % xp.uint32(d_prime)
+    sign = xp.where((h & xp.uint32(1)) == 1, xp.float32(1.0), xp.float32(-1.0))
+    return bucket.astype(xp.int32), sign
+
+
+def sketch_srp_reference(
+    X, d_prime: int, seed: int, *, block_d: int = 512
+) -> np.ndarray:
+    """Blockwise y = X @ S on host — the device kernel's parity oracle.
+
+    The (d, d_prime) projection is regenerated one (block_d, d_prime) block
+    at a time, so host memory stays O(n·d_prime + block_d·d_prime) no
+    matter how large d grows.
+    """
+    X = np.asarray(X, np.float32)
+    n, d = X.shape
+    out = np.zeros((n, int(d_prime)), np.float32)
+    for k0 in range(0, d, block_d):
+        bd = min(block_d, d - k0)
+        S = srp_sign_block(seed, k0, bd, d_prime, d, np)
+        out += X[:, k0 : k0 + bd] @ S
+    return out
+
+
+def sketch_countsketch_reference(X, d_prime: int, seed: int) -> np.ndarray:
+    """Seeded counting sketch on host (unbuffered scatter-add)."""
+    X = np.asarray(X, np.float32)
+    d = X.shape[1]
+    bucket, sign = countsketch_params(d, int(d_prime), seed, np)
+    acc = np.zeros((int(d_prime), X.shape[0]), np.float32)
+    np.add.at(acc, bucket, (X * sign[None, :]).T)
+    return acc.T

@@ -131,6 +131,46 @@ def test_planner_spec_validates_eagerly():
         PlannerSpec(mode="turbo")
     with pytest.raises(ValueError, match="rebuild_every"):
         PlannerSpec(rebuild_every=0)
+    with pytest.raises(ValueError, match="sketch_dim"):
+        PlannerSpec(sketch_dim=16)  # a dimension with no sketch is a typo
+    with pytest.raises(ValueError, match="sketch_dim"):
+        PlannerSpec(sketch="srp", sketch_dim=0)
+
+
+def test_planner_spec_sketch_round_trip():
+    spec = PlannerSpec(sketch="srp", sketch_dim=64)
+    d = spec.to_dict()
+    assert d["sketch"] == "srp" and d["sketch_dim"] == 64
+    assert PlannerSpec.from_dict(d) == spec
+    assert not spec.is_default  # a sketched planner is never the no-op one
+    assert PlannerSpec(sketch="identity").is_default is False
+
+
+def test_sketch_threads_from_planner_spec_to_store():
+    pop = ClientPopulation(np.full(6, 10))
+    s = build_sampler(
+        {"name": "algorithm2", "m": 2},
+        pop,
+        planner=PlannerSpec(sketch="srp", sketch_dim=8),
+        update_dim=32,
+    )
+    try:
+        st = s.gradient_store
+        assert st.sketch.name == "srp"
+        assert (st.update_dim, st.dim) == (32, 8)
+        assert st.sketch.seed == 0  # rides SamplerSpec.seed (default 0)
+    finally:
+        s.close()
+    seeded = build_sampler(
+        {"name": "algorithm2", "m": 2, "options": {"seed": 5}},
+        pop,
+        planner=PlannerSpec(sketch="srp", sketch_dim=8),
+        update_dim=32,
+    )
+    try:
+        assert seeded.gradient_store.sketch.seed == 5
+    finally:
+        seeded.close()
 
 
 # --------------------------------------------------------------------------

@@ -85,6 +85,63 @@ def test_kill_resume_bit_identical(tmp_path, sampler):
     assert _canon_json(full) == _canon_json(resumed)
 
 
+@pytest.mark.parametrize(
+    "planner",
+    [
+        {"rebuild_every": 2, "sketch": "identity"},
+        {"rebuild_every": 2, "sketch": "srp", "sketch_dim": 16, "clusterer": "kmeans"},
+    ],
+    ids=["identity", "srp16"],
+)
+def test_kill_resume_bit_identical_sketched(tmp_path, planner):
+    """The sketched store checkpoints its (n, d') buffer + sketch identity;
+    a killed sketched campaign replays byte-for-byte. (``identity`` pins the
+    machinery-on/bit-parity case; ``srp`` the genuinely compressed one.)"""
+    spec = _spec(sampler={"name": "algorithm2", "m": 4, "seed": 3}, planner=planner)
+    full = _run_full(spec)
+    resumed = _run_interrupted(spec, os.path.join(tmp_path, "ck.npz"), kill_at=4)
+    assert _canon_json(full) == _canon_json(resumed)
+
+
+def test_identity_sketch_history_matches_unsketched():
+    """sketch='identity' engages the sketch stage yet trains bit-identically
+    to the store with no sketch stage at all — the tier-1 parity gate."""
+    plain = _run_full(_spec(sampler={"name": "algorithm2", "m": 4, "seed": 3}))
+    ident = _run_full(
+        _spec(
+            sampler={"name": "algorithm2", "m": 4, "seed": 3},
+            planner={"sketch": "identity"},
+        )
+    )
+    assert _canon_json(plain) == _canon_json(ident)
+
+
+def test_sketched_checkpoint_rejects_differently_sketched_build(tmp_path):
+    """A bundle written under srp/d'=16 must not restore into an unsketched
+    or differently-sketched sampler. A width change trips the restore
+    layer's shape guard ((n, 16) vs (n, d)); a same-width sketch swap gets
+    past shapes and must be caught by the sketch identity in the meta."""
+    path = os.path.join(tmp_path, "ck.npz")
+    sam = {"name": "algorithm2", "m": 4, "seed": 3}
+    spec = _spec(
+        sampler=sam,
+        planner={"sketch": "srp", "sketch_dim": 16, "clusterer": "kmeans"},
+    )
+    with build_experiment(spec, checkpoint_path=path) as srv:
+        srv.run_round(0)
+        srv.checkpoint()
+    with build_experiment(_spec(sampler=sam)) as srv:
+        with pytest.raises(ValueError):  # (n, 16) buffer vs unsketched (n, d)
+            srv.resume(path)
+    other = _spec(
+        sampler=sam,
+        planner={"sketch": "countsketch", "sketch_dim": 16, "clusterer": "kmeans"},
+    )
+    with build_experiment(other) as srv:
+        with pytest.raises(ValueError, match="sketch"):
+            srv.resume(path)
+
+
 def test_async_planner_checkpoint_captures_sync_fixed_point(tmp_path):
     """Async campaigns checkpoint through prepare_state(): the in-flight
     rebuild is flushed, so the bundle holds the sync fixed point — the
