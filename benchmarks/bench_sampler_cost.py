@@ -1,6 +1,11 @@
 """Algorithm cost scaling (Theorems 3 & 4): Algorithm 1 is O(n log n);
 Algorithm 2 is O(n^2 d + X) dominated by the similarity matrix.
 
+Also sweeps the *per-draw* cost of every registered sampling scheme in one
+table (``sampler_cost/draw/<name>``): each scheme is constructed through
+the same spec door experiments use, then its ``sample()`` is timed —
+plan-build cost is amortized out, so the rows isolate what a round pays.
+
 ``--smoke`` runs one tiny size per algorithm — used by the tier-1 script to
 catch import/collection regressions in the benchmark tree cheaply.
 """
@@ -12,6 +17,29 @@ import numpy as np
 
 from benchmarks.common import emit, timed
 from repro.core import ClientPopulation, build_plan_algorithm1, build_plan_algorithm2
+
+
+def draw_cost_sweep(*, smoke: bool) -> None:
+    """Per-draw cost of every scheme in ``SAMPLERS``, one table."""
+    from repro.core.samplers import SAMPLERS
+    from repro.fl.experiment import build_sampler
+
+    m = 4 if smoke else 10
+    n = 5 * m  # uniform sizes + n % m == 0: target's oracle groups are balanced
+    update_dim = 32 if smoke else 256
+    pop = ClientPopulation(np.full(n, 100))
+    oracle_groups = [g.tolist() for g in np.arange(n).reshape(m, -1)]
+    for name in SAMPLERS.names():
+        options = {"groups": oracle_groups} if name == "target" else {}
+        sampler = build_sampler(
+            {"name": name, "m": m, "seed": 0, "options": options},
+            pop, update_dim=update_dim,
+        )
+        try:
+            us, _ = timed(lambda: sampler.sample(0), repeats=3 if smoke else 20)
+        finally:
+            getattr(sampler, "close", lambda: None)()
+        emit(f"sampler_cost/draw/{name}", us, f"n={n};m={m}")
 
 
 def main(argv: "list[str] | None" = None) -> None:
@@ -33,6 +61,7 @@ def main(argv: "list[str] | None" = None) -> None:
         G = rng.normal(size=(n, 256))
         us, _ = timed(lambda: build_plan_algorithm2(pop, 10, G), repeats=2)
         emit(f"sampler_cost/algorithm2/n={n}", us, "theory=O(n^2 d + ward)")
+    draw_cost_sweep(smoke=args.smoke)
 
 
 if __name__ == "__main__":

@@ -24,6 +24,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   bench_engine_sharded — mesh-sharded engine: per-device staged bytes sweep
   bench_async_planner  — async re-clustering planner + streamed similarity
   bench_store_scale    — sketched GradientStore: bytes/scatter/rebuild at scale
+  scheme_race          — every registered selection scheme raced on one sweep
 """
 from __future__ import annotations
 
@@ -45,6 +46,7 @@ from benchmarks import (
     beyond_paper,
     fig1_controlled,
     fig2_dirichlet,
+    scheme_race,
     table_variance,
 )
 
@@ -60,6 +62,7 @@ MODULES = [
     ("bench_dryrun_roofline", bench_dryrun_roofline),
     ("fig1_controlled", fig1_controlled),
     ("fig2_dirichlet", fig2_dirichlet),
+    ("scheme_race", scheme_race),
     ("ablations", ablations),
     ("beyond_paper", beyond_paper),
 ]

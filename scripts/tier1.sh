@@ -84,6 +84,23 @@ python -m benchmarks.run --sweep "$SWEEP_JSON" --store "$SWEEP_STORE" \
   | tee /dev/stderr | grep -c "status=skipped" | grep -qx 4
 test -s "$SWEEP_STORE/cells.csv" && test -s "$SWEEP_STORE/summary.csv"
 
+echo "== tier-1: scheme race smoke (2 schemes x 2 seeds, then resume) =="
+RACE_STORE="$(mktemp -d)"
+trap 'rm -rf "$SWEEP_STORE" "$RACE_STORE"' EXIT
+python -m benchmarks.scheme_race --smoke --store "$RACE_STORE"
+# re-invoking the same store must resume (all 4 cells skip, collation intact)
+python -m benchmarks.scheme_race --smoke --store "$RACE_STORE" \
+  | tee /dev/stderr | grep -c "status=skipped" | grep -qx 4
+test -s "$RACE_STORE/summary.csv"
+# summary.csv must carry the race columns (time-to-accuracy + weight variance)
+head -1 "$RACE_STORE/summary.csv" | grep -q "rounds_to_acc_mean"
+head -1 "$RACE_STORE/summary.csv" | grep -q "agg_weight_var_mean"
+
+echo "== tier-1: md == importance(mix=1.0) bit-parity gate =="
+# importance with a size-proportional proposal (mix=1.0) must train
+# byte-for-byte like md — the scheme zoo's degenerate-case anchor
+python -m benchmarks.scheme_race --parity
+
 echo "== tier-1: registry discoverability (--list) =="
 python -m benchmarks.run --list
 
@@ -99,7 +116,7 @@ python -m benchmarks.run --spec '{
 
 echo "== tier-1: continuous-service smoke (SIGTERM mid-campaign, then resume) =="
 SVC_DIR="$(mktemp -d)"
-trap 'rm -rf "$SWEEP_STORE" "$SVC_DIR"' EXIT
+trap 'rm -rf "$SWEEP_STORE" "$RACE_STORE" "$SVC_DIR"' EXIT
 SVC_SPEC='{
   "data": {"name": "by_class_shards",
            "options": {"n_classes": 4, "clients_per_class": 2, "dim": 8,

@@ -3,7 +3,9 @@
 Public API:
   - ClientPopulation / SamplingPlan / SampleResult datatypes
   - samplers: UniformSampler (FedAvg), MDSampler, Algorithm1Sampler,
-    Algorithm2Sampler, TargetSampler, generic ClusteredSampler
+    Algorithm2Sampler, TargetSampler, generic ClusteredSampler, and the
+    scheme zoo (StratifiedSampler, ImportanceSampler, DPStratifiedSampler,
+    HybridSampler) on the shared StoreBackedSampler contract
   - validate_plan: exact Proposition-1 checking
   - statistics: closed-form variance / inclusion-probability formulas
 """
@@ -16,11 +18,18 @@ from repro.core.samplers import (
     Algorithm2Sampler,
     ClientSampler,
     ClusteredSampler,
+    DPStratifiedSampler,
+    HybridSampler,
+    ImportanceSampler,
     MDSampler,
+    StoreBackedSampler,
+    StratifiedSampler,
     TargetSampler,
     UniformSampler,
     build_plan_algorithm1,
     build_plan_algorithm2,
+    build_plan_hybrid,
+    build_plan_stratified,
     build_plan_target,
     max_draws_bound,
     validate_plan,
@@ -35,12 +44,19 @@ __all__ = [
     "UniformSampler",
     "MDSampler",
     "ClusteredSampler",
+    "StoreBackedSampler",
     "Algorithm1Sampler",
     "Algorithm2Sampler",
     "TargetSampler",
+    "StratifiedSampler",
+    "ImportanceSampler",
+    "DPStratifiedSampler",
+    "HybridSampler",
     "build_plan_algorithm1",
     "build_plan_algorithm2",
     "build_plan_target",
+    "build_plan_stratified",
+    "build_plan_hybrid",
     "validate_plan",
     "max_draws_bound",
     "statistics",

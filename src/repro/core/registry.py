@@ -11,6 +11,7 @@ spec dict — no call-site surgery.
 """
 from __future__ import annotations
 
+import difflib
 from typing import Any, Callable, Iterator, Optional
 
 
@@ -53,10 +54,14 @@ class Registry:
             raise ValueError(self._unknown(name)) from None
 
     def _unknown(self, name: str) -> str:
-        return (
+        msg = (
             f"unknown {self.kind} {name!r}; registered {self.kind}s: "
             f"{sorted(self._entries)}"
         )
+        close = difflib.get_close_matches(str(name), list(self._entries), n=1)
+        if close:
+            msg += f" — did you mean {close[0]!r}?"
+        return msg
 
     def names(self) -> list[str]:
         return sorted(self._entries)

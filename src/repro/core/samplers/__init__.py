@@ -3,16 +3,29 @@
 ``SAMPLERS`` is the seed *registry* of schemes: spec-driven construction
 (``repro.fl.experiment.SamplerSpec``) resolves names through it, and
 ``register_sampler("mine", MySampler)`` plugs a new scheme into every
-driver, benchmark and CLI that speaks specs.
+driver, benchmark and CLI that speaks specs. Beyond the paper's own
+algorithms, :mod:`repro.core.samplers.schemes` contributes the published
+competitor zoo — ``stratified`` / ``importance`` / ``dp_stratified`` /
+``hybrid`` — all built on the shared
+:class:`~repro.core.samplers.store_backed.StoreBackedSampler` contract.
 """
 from repro.core.registry import Registry
 from repro.core.samplers.base import ClientSampler, max_draws_bound, validate_plan
 from repro.core.samplers.uniform import UniformSampler
 from repro.core.samplers.md import MDSampler
 from repro.core.samplers.clustered import ClusteredSampler
+from repro.core.samplers.store_backed import StoreBackedSampler
 from repro.core.samplers.algorithm1 import Algorithm1Sampler, build_plan_algorithm1
 from repro.core.samplers.algorithm2 import Algorithm2Sampler, build_plan_algorithm2
 from repro.core.samplers.target import TargetSampler, build_plan_target
+from repro.core.samplers.schemes import (
+    DPStratifiedSampler,
+    HybridSampler,
+    ImportanceSampler,
+    StratifiedSampler,
+    build_plan_hybrid,
+    build_plan_stratified,
+)
 
 SAMPLERS = Registry(
     "sampler",
@@ -22,6 +35,10 @@ SAMPLERS = Registry(
         "algorithm1": Algorithm1Sampler,
         "algorithm2": Algorithm2Sampler,
         "target": TargetSampler,
+        "stratified": StratifiedSampler,
+        "importance": ImportanceSampler,
+        "dp_stratified": DPStratifiedSampler,
+        "hybrid": HybridSampler,
     },
 )
 
@@ -32,12 +49,19 @@ __all__ = [
     "UniformSampler",
     "MDSampler",
     "ClusteredSampler",
+    "StoreBackedSampler",
     "Algorithm1Sampler",
     "Algorithm2Sampler",
     "TargetSampler",
+    "StratifiedSampler",
+    "ImportanceSampler",
+    "DPStratifiedSampler",
+    "HybridSampler",
     "build_plan_algorithm1",
     "build_plan_algorithm2",
     "build_plan_target",
+    "build_plan_stratified",
+    "build_plan_hybrid",
     "validate_plan",
     "max_draws_bound",
     "Registry",

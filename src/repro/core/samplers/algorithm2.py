@@ -28,8 +28,8 @@ import numpy as np
 
 from repro.core.allocation import allocate_by_groups
 from repro.core.clustering.backends import resolve_clusterer
-from repro.core.samplers.clustered import ClusteredSampler
-from repro.core.types import ClientPopulation, SamplingPlan, SampleResult
+from repro.core.samplers.store_backed import StoreBackedSampler
+from repro.core.types import ClientPopulation, SamplingPlan
 
 # pairwise-distance backend signature: (G, measure) -> (n, n) distances
 DistanceFn = Callable[[np.ndarray, str], np.ndarray]
@@ -116,7 +116,7 @@ def build_plan_algorithm2(
     return SamplingPlan(r=tokens / M, r_tokens=tokens, cluster_of=cluster_of)
 
 
-class Algorithm2Sampler(ClusteredSampler):
+class Algorithm2Sampler(StoreBackedSampler):
     """Similarity-based clustered sampling with online re-clustering.
 
     The latest representative gradient of every client (zeros until first
@@ -126,10 +126,12 @@ class Algorithm2Sampler(ClusteredSampler):
     worker overlapping the next round (``planner="async"``), matching the
     paper's server that overlaps re-clustering with client local work. The
     freshest completed plan is swapped in at each round boundary (in
-    :meth:`sample`).
+    :meth:`sample`). The store/service machinery is the shared
+    :class:`~repro.core.samplers.store_backed.StoreBackedSampler` skeleton;
+    this class contributes only the Section-5 plan construction.
     """
 
-    consumes_updates = True
+    scheme_name = "algorithm2"
 
     def __init__(
         self,
@@ -192,154 +194,31 @@ class Algorithm2Sampler(ClusteredSampler):
         a checkpointed store restores against the identical projection.
         ``store_mesh_spec`` shards the store's client axis over a device
         mesh (the PR 2 engine mesh convention)."""
-        from repro.fl.gradient_store import GradientStore
-        from repro.fl.planner import PlanService
-
         self.measure = measure
-        self.update_dim = int(update_dim)
         self._distance_fn = _resolve_distance_fn(distance_fn)
         self._clusterer = clusterer
-        self.staleness_decay = float(staleness_decay)
-        self._store = GradientStore(
-            population.n_clients,
+        self._clusterer_seed = int(seed)
+        super().__init__(
+            population,
+            m,
             update_dim,
+            seed=seed,
             staleness_decay=staleness_decay,
-            sketch=sketch,
-            sketch_dim=sketch_dim,
-            sketch_seed=seed,
-            mesh_spec=store_mesh_spec,
-        )
-
-        def build(G) -> SamplingPlan:
-            return build_plan_algorithm2(
-                population,
-                m,
-                G,
-                measure=measure,
-                distance_fn=self._distance_fn,
-                clusterer=self._clusterer,
-                clusterer_seed=seed,
-            )
-
-        self._service = PlanService(
-            build,
-            mode=planner,
-            initial_input=self._store.snapshot(),
+            planner=planner,
             rebuild_every=rebuild_every,
             drift_threshold=drift_threshold,
-        )
-        super().__init__(population, self._service.current().plan, seed=seed)
-
-    @property
-    def representative_gradients(self) -> np.ndarray:
-        """Host copy of the resident G — (n, d'), sketch space if sketched."""
-        return self._store.asnumpy()
-
-    @property
-    def gradient_store(self):
-        return self._store
-
-    @property
-    def plan_service(self):
-        return self._service
-
-    def _swap_freshest(self) -> None:
-        vp = self._service.poll()
-        if vp is not None:
-            self.set_plan(vp.plan)
-
-    def observe_updates(self, client_ids, updates) -> None:
-        """Scatter the round's updates into the store and trigger a rebuild.
-
-        ``updates`` may be the engine's device array — it is neither copied
-        to host nor cast; the store scatters it on device and the plan
-        service receives an immutable snapshot of G.
-        """
-        if tuple(updates.shape) != (len(client_ids), self.update_dim):
-            raise ValueError(
-                f"updates shape {tuple(updates.shape)} != ({len(client_ids)}, {self.update_dim})"
-            )
-        self._store.update(client_ids, updates)
-        self._service.observe(self._store.snapshot())
-        if self._service.mode == "sync":
-            self._swap_freshest()
-
-    def plan_telemetry(self) -> tuple[int, int]:
-        return self._service.telemetry()
-
-    def plan_cost_telemetry(self) -> tuple[float, float]:
-        return self._service.last_build_ms(), self._service.last_drift()
-
-    def flush_plan(self) -> None:
-        """Block until any in-flight rebuild lands, then swap it in.
-
-        Forces the async planner to the sync fixed point — after this, the
-        plan equals what ``planner="sync"`` would hold (fp32 tolerance)."""
-        self._service.flush()
-        self._swap_freshest()
-
-    def close(self) -> None:
-        self._service.close()
-
-    # -- checkpointable state ------------------------------------------------
-    def prepare_state(self) -> None:
-        """Quiesce the planner so the checkpoint is the sync fixed point.
-
-        With ``planner="async"`` an in-flight rebuild cannot ride in a
-        checkpoint; flushing first makes the exported (G, plan, counters)
-        bundle self-consistent — a restored server continues exactly as a
-        sync-planned one would from this state.
-        """
-        self.flush_plan()
-
-    def state_arrays(self) -> dict:
-        arrays = super().state_arrays()
-        arrays["store_G"] = self._store.asnumpy()
-        return arrays
-
-    def state_meta(self) -> dict:
-        meta = super().state_meta()
-        version, _ = self._service.telemetry()
-        meta["plan_version"] = version
-        meta["obs_seen"] = self._service.observations_seen()
-        # the sketch identity rides along so a restore into a differently-
-        # sketched store fails loudly instead of mixing sketch spaces
-        sk = self._store.sketch
-        meta["sketch"] = None if sk is None else sk.name
-        meta["sketch_dim"] = None if sk is None else sk.d_out
-        meta["sketch_seed"] = None if sk is None else sk.seed
-        return meta
-
-    def load_state(self, meta: dict, arrays: dict) -> None:
-        super().load_state(meta, arrays)  # rng + the exact live plan
-        sk = self._store.sketch
-        have = (
-            (None if sk is None else sk.name),
-            (None if sk is None else sk.d_out),
-            (None if sk is None else sk.seed),
-        )
-        want = (
-            meta.get("sketch"),
-            meta.get("sketch_dim"),
-            meta.get("sketch_seed"),
-        )
-        if want != have:
-            raise ValueError(
-                f"checkpointed sketch state {want} != this sampler's sketch "
-                f"{have}: a (name, dim, seed) mismatch would scatter new "
-                "updates into a different sketch space than the restored G"
-            )
-        self._store.load(arrays["store_G"])
-        from repro.fl.planner import VersionedPlan
-
-        self._service.restore(
-            VersionedPlan(self._plan, int(meta["plan_version"])),
-            obs_seen=int(meta["obs_seen"]),
+            sketch=sketch,
+            sketch_dim=sketch_dim,
+            store_mesh_spec=store_mesh_spec,
         )
 
-    def sample(
-        self, round_idx: int, available: Optional[np.ndarray] = None
-    ) -> SampleResult:
-        del round_idx
-        self._swap_freshest()  # round boundary: adopt the freshest plan
-        return self._draw_from_plan(self._plan, available)
+    def _build_plan(self, G) -> SamplingPlan:
+        return build_plan_algorithm2(
+            self.population,
+            self.m,
+            G,
+            measure=self.measure,
+            distance_fn=self._distance_fn,
+            clusterer=self._clusterer,
+            clusterer_seed=self._clusterer_seed,
+        )

@@ -273,7 +273,38 @@ SUMMARY_STATS: tuple[str, ...] = (
     "final_acc",
     "mean_distinct_classes",
     "mean_distinct_clients",
+    "rounds_to_acc",
+    "agg_weight_var",
 )
+
+#: test-accuracy threshold ``rounds_to_acc`` races schemes toward.
+ACC_TARGET = 0.75
+
+
+def rounds_to_accuracy(hist: History, rounds: int, target: float = ACC_TARGET) -> float:
+    """First round count (1-based) at which test accuracy reaches ``target``.
+
+    Censored runs (never reaching ``target``, or with no evaluated rounds)
+    report ``rounds`` — a pessimistic, finite value, so mean±std over seeds
+    stays well-defined for the time-to-accuracy race column.
+    """
+    acc = np.nan_to_num(hist.series("test_acc"), nan=-np.inf)
+    hits = np.flatnonzero(acc >= target)
+    return float(hits[0] + 1) if hits.size else float(rounds)
+
+
+def agg_weight_variance(hist: History) -> float:
+    """Σ_i Var_t(ω_i): total across-round variance of aggregation weights.
+
+    The paper's quality axis for client selection — clustered/stratified
+    schemes exist to shrink it at fixed E[ω_i] = p_i. NaN when the history
+    carries no ``agg_weights`` telemetry or fewer than two rounds of it.
+    """
+    ws = [r.agg_weights for r in hist.records if r.agg_weights is not None]
+    if len(ws) < 2:
+        return float("nan")
+    W = np.asarray(ws, dtype=np.float64)
+    return float(W.var(axis=0, ddof=0).sum())
 
 
 def summarize_history(hist: History, rounds: int) -> dict:
@@ -286,6 +317,8 @@ def summarize_history(hist: History, rounds: int) -> dict:
         "final_acc": float(np.nanmax(hist.series("test_acc")[-3:])),
         "mean_distinct_classes": float(hist.series("n_distinct_classes").mean()),
         "mean_distinct_clients": float(hist.series("n_distinct_clients").mean()),
+        "rounds_to_acc": rounds_to_accuracy(hist, rounds),
+        "agg_weight_var": agg_weight_variance(hist),
     }
 
 

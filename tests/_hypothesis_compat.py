@@ -57,7 +57,13 @@ except ModuleNotFoundError:
             minimal=lambda: [elements.minimal() for _ in range(min_size)],
         )
 
-    st = types.SimpleNamespace(integers=_integers, lists=_lists)
+    def _floats(min_value=0.0, max_value=1.0):
+        return _Strategy(
+            draw=lambda rng: float(rng.uniform(min_value, max_value)),
+            minimal=lambda: float(min_value),
+        )
+
+    st = types.SimpleNamespace(integers=_integers, lists=_lists, floats=_floats)
 
     def settings(*, max_examples=10, **_ignored):
         """Record ``max_examples``; other knobs (deadline, …) are no-ops."""

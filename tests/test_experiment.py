@@ -186,6 +186,26 @@ def test_unknown_registry_names_list_known():
         ENGINES.get("turbo")
 
 
+def test_unknown_registry_names_suggest_close_match():
+    """Near-miss names get a did-you-mean suffix across every registry."""
+    from repro.core.clustering import CLUSTERERS
+    from repro.fl.population import POPULATIONS
+    from repro.kernels.sketch import SKETCHERS
+
+    with pytest.raises(ValueError, match=r"did you mean 'algorithm2'\?"):
+        SAMPLERS.get("algorithm2x")
+    with pytest.raises(ValueError, match=r"did you mean 'ward'\?"):
+        CLUSTERERS.get("wardd")
+    with pytest.raises(ValueError, match=r"did you mean 'srp'\?"):
+        SKETCHERS.get("srpp")
+    with pytest.raises(ValueError, match=r"did you mean 'poisson'\?"):
+        POPULATIONS.get("poissonn")
+    # gibberish far from every entry: the listing stays, no suggestion
+    with pytest.raises(ValueError, match=r"unknown sampler") as ei:
+        SAMPLERS.get("zzqx")
+    assert "did you mean" not in str(ei.value)
+
+
 def test_sampler_options_checked_against_signature():
     pop = ClientPopulation(np.full(4, 10))
     with pytest.raises(ValueError, match=r"'algorithm2' does not accept option\(s\) \['measur'\]"):

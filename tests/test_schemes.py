@@ -1,0 +1,236 @@
+"""The scheme zoo: stratified / importance / dp_stratified / hybrid.
+
+Pins the contracts ISSUE-level claims rest on: every scheme is
+constructible from a JSON ExperimentSpec and trains end-to-end; hybrid
+degenerates to stratified token-for-token when no client is large;
+importance at ``mix = 1.0`` is bit-identical to MD sampling; the DP
+ledger spends exactly one ρ_step per observed round and converts to a
+monotone (ε, δ).
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ClientPopulation,
+    DPStratifiedSampler,
+    HybridSampler,
+    ImportanceSampler,
+    MDSampler,
+    StratifiedSampler,
+    build_plan_hybrid,
+    build_plan_stratified,
+    validate_plan,
+)
+from repro.core.samplers.schemes.dp import gaussian_epsilon
+from repro.core.samplers.schemes.importance import importance_probabilities
+from repro.core.samplers.schemes.stratified import default_n_strata
+from repro.fl.experiment import ExperimentSpec, build_experiment
+
+SCHEMES = ["stratified", "importance", "dp_stratified", "hybrid"]
+
+
+def _pop(sizes) -> ClientPopulation:
+    return ClientPopulation(np.asarray(sizes, dtype=np.int64))
+
+
+def _gradients(n: int, d: int = 16, seed: int = 0) -> np.ndarray:
+    return np.random.default_rng(seed).normal(size=(n, d)).astype(np.float32)
+
+
+# --------------------------------------------------------------------------
+# JSON spec construction: the zoo is reachable from the declarative door
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_scheme_constructible_from_json_spec(scheme):
+    spec = ExperimentSpec.from_json(json.dumps({
+        "data": {"name": "by_class_shards",
+                 "options": {"n_classes": 4, "clients_per_class": 2, "dim": 8,
+                              "train_per_client": 40, "test_per_client": 8,
+                              "seed": 0}},
+        "sampler": {"name": scheme, "m": 4, "seed": 1},
+        "train": {"n_rounds": 2, "n_local_steps": 2, "batch_size": 10,
+                   "hidden": [16], "seed": 1},
+    }))
+    with build_experiment(spec) as srv:
+        hist = srv.run()
+    assert len(hist.records) == 2
+    assert all(np.isfinite(r.train_loss) for r in hist.records)
+    for r in hist.records:
+        assert r.n_distinct_clients >= 1
+        w = np.asarray(r.agg_weights)
+        assert np.all(np.isfinite(w)) and w.sum() > 0
+
+
+# --------------------------------------------------------------------------
+# stratified: exact eq.(7)/(8) plans with stratum structure
+# --------------------------------------------------------------------------
+def test_stratified_plan_exact_and_stratified():
+    pop = _pop([30, 50, 20, 40, 10, 60, 25, 35, 45, 15])
+    plan = build_plan_stratified(pop, 4, _gradients(10))
+    validate_plan(plan, pop)  # exact eq.(7)/(8), integer tokens included
+    k = default_n_strata(10)
+    sids = np.unique(plan.cluster_of)
+    assert sids.min() >= 0 and sids.size <= k
+    assert plan.cluster_of.shape == (10,)
+
+
+def test_stratified_n_strata_bounds():
+    pop = _pop([10, 10, 10, 10])
+    with pytest.raises(ValueError):
+        build_plan_stratified(pop, 2, _gradients(4), n_strata=0)
+    with pytest.raises(ValueError):
+        build_plan_stratified(pop, 2, _gradients(4), n_strata=5)
+
+
+# --------------------------------------------------------------------------
+# hybrid: strict generalization of stratified
+# --------------------------------------------------------------------------
+def test_hybrid_equals_stratified_without_large_clients():
+    """No client with p_i >= 1/m -> empty head -> token-for-token equality."""
+    pop = _pop([30, 50, 20, 40, 10, 60, 25, 35, 45, 15])  # max p = 60/330 < 1/4
+    G = _gradients(10)
+    a = build_plan_stratified(pop, 4, G, seed=3)
+    b = build_plan_hybrid(pop, 4, G, seed=3)
+    np.testing.assert_array_equal(a.r_tokens, b.r_tokens)
+    np.testing.assert_array_equal(a.cluster_of, b.cluster_of)
+
+
+def test_hybrid_head_gets_probability_one_urns():
+    sizes = [450, 50, 40, 30, 20, 10]  # p_0 = 3/4 exactly -> 3 dedicated urns
+    pop = _pop(sizes)
+    plan = build_plan_hybrid(pop, 4, _gradients(6))
+    validate_plan(plan, pop)
+    assert int(np.sum(plan.r[:, 0] == 1.0)) == 3
+    assert plan.cluster_of[0] == -1  # no remainder: fully outside the strata
+
+    # a head client WITH a remainder also rides the tail strata
+    pop2 = _pop([500, 30, 20, 25, 15, 10])  # floor(4 * 500/600) = 3 urns + rest
+    plan2 = build_plan_hybrid(pop2, 4, _gradients(6))
+    validate_plan(plan2, pop2)
+    assert int(np.sum(plan2.r[:, 0] == 1.0)) == 3
+    assert plan2.cluster_of[0] >= 0  # its remainder joins a stratum
+
+
+# --------------------------------------------------------------------------
+# importance: proposal construction + exact MD degeneration
+# --------------------------------------------------------------------------
+def test_importance_probabilities_mix_floor():
+    p = np.array([0.5, 0.3, 0.2])
+    norms = np.array([0.0, 1.0, 4.0])
+    q = importance_probabilities(p, norms, mix=0.25)
+    assert q.sum() == pytest.approx(1.0)
+    assert np.all(q >= 0.25 * p)  # the floor bounds p_i/q_i <= 1/mix
+    assert q[2] > p[2]  # large-norm client is up-weighted
+    # degenerate regimes return p EXACTLY (no float drift)
+    assert np.array_equal(importance_probabilities(p, norms, mix=1.0), p)
+    assert np.array_equal(importance_probabilities(p, np.zeros(3), mix=0.25), p)
+
+
+def test_importance_mix_zero_rejected():
+    pop = _pop([10, 20, 30, 40])
+    with pytest.raises(ValueError, match="mix"):
+        ImportanceSampler(pop, 2, 8, mix=0.0)
+
+
+def test_importance_mix_one_bit_identical_to_md():
+    pop = _pop([30, 50, 20, 40, 10, 60, 25, 35])
+    md = MDSampler(pop, 4, seed=9)
+    imp = ImportanceSampler(pop, 4, 16, mix=1.0, seed=9)
+    try:
+        rng = np.random.default_rng(2)
+        for t in range(6):
+            imp.observe_updates(np.arange(8), rng.normal(size=(8, 16)).astype(np.float32))
+            mask = None if t % 2 == 0 else rng.random(8) < 0.7
+            a = md.sample(t, mask)
+            b = imp.sample(t, mask)
+            np.testing.assert_array_equal(a.clients, b.clients)
+            np.testing.assert_array_equal(a.agg_weights, b.agg_weights)
+    finally:
+        imp.close()
+
+
+def test_importance_reweights_unbiasedly_toward_p():
+    """Non-degenerate mix: E[ω_i] over many draws matches p_i exactly via the
+    correction — the Monte-Carlo pin for the draw-time unbiasedness."""
+    pop = _pop([10, 40, 30, 20])
+    imp = ImportanceSampler(pop, 3, 8, mix=0.3, seed=0)
+    try:
+        G = np.diag([4.0, 1.0, 0.5, 2.0]) @ np.ones((4, 8))
+        imp.observe_updates(np.arange(4), G.astype(np.float32))
+        q = imp.plan.r[0]
+        assert not np.allclose(q, pop.importances)  # genuinely tilted
+        acc = np.zeros(4)
+        n_draws = 4000
+        for t in range(n_draws):
+            res = imp.sample(t)
+            acc += res.agg_weights
+        np.testing.assert_allclose(acc / n_draws, pop.importances, atol=0.02)
+    finally:
+        imp.close()
+
+
+# --------------------------------------------------------------------------
+# dp_stratified: ledger accounting + plan exactness under noise
+# --------------------------------------------------------------------------
+def test_dp_ledger_spends_one_step_per_observation():
+    pop = _pop([30, 50, 20, 40, 10, 60])
+    dp = DPStratifiedSampler(pop, 3, 8, noise_multiplier=2.0, seed=1)
+    try:
+        assert dp.privacy_ledger == {
+            "observations": 0, "rho": 0.0, "epsilon": 0.0, "delta": 1e-5,
+        }  # cold-start plan spends nothing
+        rng = np.random.default_rng(0)
+        eps = [dp.privacy_ledger["epsilon"]]
+        for t in range(3):
+            dp.observe_updates(np.arange(6), rng.normal(size=(6, 8)).astype(np.float32))
+            led = dp.privacy_ledger
+            assert led["observations"] == t + 1
+            assert led["rho"] == pytest.approx((t + 1) / (2.0 * 2.0**2))
+            eps.append(led["epsilon"])
+        assert all(b > a for a, b in zip(eps, eps[1:]))  # ε strictly grows
+        # the plan under noise is STILL an exact eq.(7)/(8) plan
+        validate_plan(dp.plan, pop)
+    finally:
+        dp.close()
+
+
+def test_dp_more_noise_means_less_epsilon():
+    rho_lo = 3 / (2.0 * 4.0**2)  # 3 releases at sigma=4
+    rho_hi = 3 / (2.0 * 0.5**2)  # 3 releases at sigma=0.5
+    assert gaussian_epsilon(rho_lo, 1e-5) < gaussian_epsilon(rho_hi, 1e-5)
+    assert gaussian_epsilon(0.0, 1e-5) == 0.0
+
+
+def test_dp_invalid_knobs_rejected():
+    pop = _pop([10, 20, 30])
+    with pytest.raises(ValueError, match="noise_multiplier"):
+        DPStratifiedSampler(pop, 2, 8, noise_multiplier=0.0)
+    with pytest.raises(ValueError, match="clip_norm"):
+        DPStratifiedSampler(pop, 2, 8, clip_norm=-1.0)
+    with pytest.raises(ValueError, match="delta"):
+        DPStratifiedSampler(pop, 2, 8, delta=1.5)
+
+
+# --------------------------------------------------------------------------
+# the shared store-backed contract
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("cls, kwargs", [
+    (StratifiedSampler, {}),
+    (HybridSampler, {}),
+    (DPStratifiedSampler, {"noise_multiplier": 3.0}),
+])
+def test_store_backed_schemes_restratify_on_observe(cls, kwargs):
+    """Observed updates rebuild the plan (sync planner: next swap sees it)."""
+    pop = _pop([30, 50, 20, 40, 10, 60, 25, 35])
+    s = cls(pop, 4, 16, seed=0, **kwargs)
+    try:
+        v0 = s.plan_telemetry()[0]
+        rng = np.random.default_rng(1)
+        s.observe_updates(np.arange(8), rng.normal(size=(8, 16)).astype(np.float32))
+        s.sample(0)  # swap-in point for the sync planner
+        assert s.plan_telemetry()[0] > v0
+        validate_plan(s.plan, pop)
+    finally:
+        s.close()

@@ -75,6 +75,11 @@ def _run_interrupted(spec, path, kill_at):
         {"name": "algorithm1", "m": 4, "seed": 3},
         {"name": "uniform", "m": 4, "seed": 3},
         {"name": "algorithm2", "m": 4, "seed": 3},
+        {"name": "stratified", "m": 4, "seed": 3},
+        {"name": "importance", "m": 4, "seed": 3, "options": {"mix": 0.3}},
+        {"name": "dp_stratified", "m": 4, "seed": 3,
+         "options": {"noise_multiplier": 2.0}},
+        {"name": "hybrid", "m": 4, "seed": 3},
     ],
     ids=lambda s: s["name"],
 )
@@ -241,6 +246,47 @@ def test_checkpoint_without_path_is_an_error():
             srv.checkpoint()
         with pytest.raises(ValueError, match="checkpoint path"):
             srv.resume()
+
+
+def test_dp_ledger_survives_checkpoint_roundtrip(tmp_path):
+    """The (ε, δ) ledger and the mechanism rng ride the bundle: the resumed
+    campaign continues the SAME privacy accounting (count, ρ, ε) and noise
+    stream instead of resetting either."""
+    path = os.path.join(tmp_path, "ck.npz")
+    spec = _spec(sampler={"name": "dp_stratified", "m": 4, "seed": 3,
+                          "options": {"noise_multiplier": 2.0}})
+    with build_experiment(spec, checkpoint_path=path) as srv:
+        for t in range(4):
+            srv.run_round(t)
+        srv.checkpoint()
+        ledger = srv.sampler.privacy_ledger
+        dp_rng = srv.sampler._dp_rng.bit_generator.state
+    assert ledger["observations"] == 4  # one release per observed round
+    assert ledger["rho"] == pytest.approx(4 / (2.0 * 2.0**2))
+    assert ledger["epsilon"] > 0
+    with build_experiment(spec, checkpoint_path=path) as srv:
+        assert srv.resume() == 4
+        assert srv.sampler.privacy_ledger == ledger
+        assert srv.sampler._dp_rng.bit_generator.state == dp_rng
+        srv.run()
+        post = srv.sampler.privacy_ledger
+    assert post["observations"] == 8  # accounting continued, not reset
+    assert post["epsilon"] > ledger["epsilon"]
+
+
+def test_cross_scheme_restore_rejected(tmp_path):
+    """Store-backed schemes stamp their scheme name into the bundle; a
+    checkpoint written by one scheme must not restore into another even
+    when every array shape happens to line up."""
+    path = os.path.join(tmp_path, "ck.npz")
+    spec = _spec(sampler={"name": "stratified", "m": 4, "seed": 3})
+    with build_experiment(spec, checkpoint_path=path) as srv:
+        srv.run_round(0)
+        srv.checkpoint()
+    other = _spec(sampler={"name": "dp_stratified", "m": 4, "seed": 3})
+    with build_experiment(other) as srv:
+        with pytest.raises(ValueError, match="scheme"):
+            srv.resume(path)
 
 
 def test_checkpoint_rejects_mismatched_sampler(tmp_path):

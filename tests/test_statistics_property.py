@@ -174,3 +174,118 @@ def test_conditional_draw_monte_carlo_matches_expectation():
     assert (ws[:, ~a] == 0).all()  # never draws the unavailable
     expect = _conditional_expected_weights(s.plan, a)
     np.testing.assert_allclose(ws.mean(axis=0), expect, atol=5e-3)
+
+
+# --------------------------------------------------------------------------
+# the scheme zoo: every stratified-family plan is an exact eq.(7)/(8) plan,
+# so ALL the above theorems transfer; importance owns eq.(12) at draw time
+# --------------------------------------------------------------------------
+def _exact_expected_weights(plan):
+    """E[ω_i] of the unconditional draw: Σ_k r_ki / m (eq. 12, closed form)."""
+    return plan.r.sum(axis=0) / plan.m
+
+
+@given(populations, ms, st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=25, deadline=None)
+def test_stratified_and_hybrid_plans_satisfy_all_theorems(ns, m, seed):
+    """For ANY population and gradients: stratified & hybrid plans pass the
+    exact Proposition-1 check, are exactly unbiased (E[ω_i] = p_i, sum-to-one
+    support included), and never exceed MD's weight variance (eq. 17)."""
+    from repro.core import build_plan_hybrid, build_plan_stratified
+
+    pop = ClientPopulation(np.array(ns))
+    rng = np.random.default_rng(seed)
+    G = rng.normal(size=(pop.n_clients, 6))
+    p = pop.importances
+    for build in (build_plan_stratified, build_plan_hybrid):
+        plan = build(pop, m, G, seed=seed)
+        validate_plan(plan, pop)  # exact: integer tokens, eq.(7) + eq.(8)
+        np.testing.assert_allclose(_exact_expected_weights(plan), p, atol=1e-12)
+        np.testing.assert_allclose(plan.r.sum(axis=1), 1.0, atol=1e-12)
+        assert (clustered_weight_variance(plan) <= md_weight_variance(p, m) + 1e-12).all()
+
+
+@given(populations, ms, masks)
+@settings(max_examples=20, deadline=None)
+def test_stratified_and_hybrid_availability_conditioned_unbiasedness(ns, m, seed):
+    """Under ANY availability mask the conditional draw of a stratified /
+    hybrid plan hits the eq.(8) conditional target exactly — no new code
+    path: conditional_plan works off eq.(8) alone."""
+    from repro.core import build_plan_hybrid, build_plan_stratified
+
+    pop = ClientPopulation(np.array(ns))
+    rng = np.random.default_rng(seed)
+    G = rng.normal(size=(pop.n_clients, 6))
+    a = _random_mask(pop.n_clients, seed + 1)
+    p = pop.importances
+    target = p * a / (p * a).sum()
+    for build in (build_plan_stratified, build_plan_hybrid):
+        expect = _conditional_expected_weights(build(pop, m, G, seed=seed), a)
+        np.testing.assert_allclose(expect, target, atol=1e-12)
+        assert (expect[~a] == 0).all()
+
+
+@given(populations, ms, st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=15, deadline=None)
+def test_dp_stratified_plans_stay_exactly_unbiased(ns, m, seed):
+    """ANY noise level: the DP plan is still an exact eq.(7)/(8) plan —
+    noise moves strata membership, never the allocation."""
+    from repro.core import DPStratifiedSampler
+
+    pop = ClientPopulation(np.array(ns))
+    rng = np.random.default_rng(seed)
+    s = DPStratifiedSampler(
+        pop, m, 6, noise_multiplier=float(10.0 ** (seed % 5 - 2)), seed=seed
+    )
+    try:
+        s.observe_updates(
+            np.arange(pop.n_clients),
+            rng.normal(size=(pop.n_clients, 6)).astype(np.float32),
+        )
+        s.sample(0)  # sync swap-in of the noised-strata plan
+        plan = s.plan
+    finally:
+        s.close()
+    validate_plan(plan, pop)
+    np.testing.assert_allclose(_exact_expected_weights(plan), pop.importances, atol=1e-12)
+    a = _random_mask(pop.n_clients, seed + 1)
+    p = pop.importances
+    np.testing.assert_allclose(
+        _conditional_expected_weights(plan, a), p * a / (p * a).sum(), atol=1e-12
+    )
+
+
+@given(populations, ms, masks, st.floats(min_value=0.05, max_value=1.0))
+@settings(max_examples=20, deadline=None)
+def test_importance_expected_weights_exact(ns, m, seed, mix):
+    """Importance sampling's draw-time bookkeeping is exactly unbiased for
+    ANY proposal the mix floor can produce, unconditionally AND under any
+    availability mask: E[ω_i] = p_i and E[ω_i | a] = p_i·a_i / Σ_j p_j·a_j.
+
+    Closed form: per urn, client i is drawn w.p. q_i (masked: q_i·a_i/Σq·a)
+    and carries weight (1/m)·c_i with c the sampler's correction, so
+    E[ω_i] = q_i·c_i (masked: weight w_k·c_i with w_k = Σq·a/… folded
+    into the correction's availability ratio).
+    """
+    from repro.core import ImportanceSampler
+
+    pop = ClientPopulation(np.array(ns))
+    rng = np.random.default_rng(seed)
+    s = ImportanceSampler(pop, m, 6, mix=float(mix), seed=seed)
+    try:
+        s.observe_updates(
+            np.arange(pop.n_clients),
+            rng.normal(size=(pop.n_clients, 6)).astype(np.float32),
+        )
+        s.sample(0)  # swap in the norm-tilted proposal
+        q = s.plan.r[0]
+        p = pop.importances
+        # unconditional: E[ω_i] = m·q_i·(1/m)·(p_i/q_i) = p_i exactly
+        np.testing.assert_allclose(q * s.correction(), p, atol=1e-12)
+        # masked: m urns × draw prob (q_i·a_i/Σq·a) × weight (1/m)·c_i
+        a = _random_mask(pop.n_clients, seed + 1)
+        qa = (q * a).sum()
+        expect = (q * a / qa) * s.correction(a)
+        np.testing.assert_allclose(expect, p * a / (p * a).sum(), atol=1e-12)
+    finally:
+        s.close()
