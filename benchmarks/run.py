@@ -24,6 +24,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   bench_engine_sharded — mesh-sharded engine: per-device staged bytes sweep
   bench_async_planner  — async re-clustering planner + streamed similarity
   bench_store_scale    — sketched GradientStore: bytes/scatter/rebuild at scale
+  bench_scheduler      — round schedulers (sync/deadline/overselect) under churn
   scheme_race          — every registered selection scheme raced on one sweep
 """
 from __future__ import annotations
@@ -42,6 +43,7 @@ from benchmarks import (
     bench_kernels,
     bench_round_engine,
     bench_sampler_cost,
+    bench_scheduler,
     bench_store_scale,
     beyond_paper,
     fig1_controlled,
@@ -57,6 +59,7 @@ MODULES = [
     ("bench_engine_sharded", bench_engine_sharded),
     ("bench_async_planner", bench_async_planner),
     ("bench_store_scale", bench_store_scale),
+    ("bench_scheduler", bench_scheduler),
     ("bench_fl_collectives", bench_fl_collectives),
     ("bench_kernels", bench_kernels),
     ("bench_dryrun_roofline", bench_dryrun_roofline),
@@ -124,6 +127,7 @@ def list_registered() -> None:
     from repro.fl.engine import ENGINES
     from repro.fl.experiment import DATASETS
     from repro.fl.population import POPULATIONS
+    from repro.fl.scheduler import SCHEDULERS
     from repro.kernels.sketch import SKETCHERS
 
     print("samplers:    " + " ".join(SAMPLERS.names()))
@@ -132,6 +136,7 @@ def list_registered() -> None:
     print("populations: " + " ".join(POPULATIONS.names()))
     print("clusterers:  " + " ".join(CLUSTERERS.names()))
     print("sketchers:   " + " ".join(SKETCHERS.names()))
+    print("schedulers:  " + " ".join(SCHEDULERS.names()))
     print("benchmarks:  " + " ".join(name for name, _ in MODULES))
 
 

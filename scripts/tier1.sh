@@ -19,6 +19,8 @@ python -m benchmarks.bench_engine_sharded --smoke
 python -m benchmarks.bench_async_planner --smoke --drift
 python -m benchmarks.bench_service_churn --smoke
 python -m benchmarks.bench_store_scale --smoke
+# asserts sync ≡ scheduler-free bit-parity + deadline harvest internally
+python -m benchmarks.bench_scheduler --smoke
 
 echo "== tier-1: fused streamed kernel parity vs numpy (ragged-chunk shape) =="
 # 13x101 is ragged against both the 8-row and 16-column tiles AND the

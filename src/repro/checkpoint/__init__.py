@@ -1,3 +1,3 @@
-from repro.checkpoint.io import restore_checkpoint, save_checkpoint
+from repro.checkpoint.io import peek_meta, restore_checkpoint, save_checkpoint
 
-__all__ = ["save_checkpoint", "restore_checkpoint"]
+__all__ = ["save_checkpoint", "restore_checkpoint", "peek_meta"]

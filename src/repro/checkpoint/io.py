@@ -51,7 +51,21 @@ def save_checkpoint(path: str, tree: Any, *, step: int = 0, extra: dict | None =
             os.unlink(tmp)
 
 
-def restore_checkpoint(path: str, reference: Any) -> tuple[Any, int, dict]:
+def peek_meta(path: str) -> tuple[int, dict]:
+    """Read just ``(step, extra)`` from a bundle, no array restore.
+
+    Lets callers validate a bundle's provenance (which subsystems wrote it)
+    and raise their own domain-specific errors *before* the structural
+    restore turns a missing section into a generic missing-leaf failure.
+    """
+    with np.load(path) as data:
+        meta = json.loads(bytes(data["__meta__"]).decode())
+    return int(meta["step"]), dict(meta.get("extra") or {})
+
+
+def restore_checkpoint(
+    path: str, reference: Any, *, dynamic_prefixes: tuple[str, ...] = ()
+) -> tuple[Any, int, dict]:
     """Restore arrays into the structure of ``reference``.
 
     Returns ``(tree, step, extra)`` — ``extra`` is the JSON side-channel
@@ -64,6 +78,14 @@ def restore_checkpoint(path: str, reference: Any) -> tuple[Any, int, dict]:
     mismatches and leaves present in the ``.npz`` but absent from the
     reference are all errors — a silently-ignored leaf is state that a
     resumed run would quietly lose.
+
+    ``dynamic_prefixes`` exempts designated subtrees from the shape guard:
+    a leaf whose path key starts with one of the prefixes takes its shape
+    from disk (dtype and residence still from the reference). This is for
+    genuinely variable-shaped state — a straggler harvest buffer holds
+    however many late updates the killed round produced, while a fresh
+    server's reference buffer is empty — where the reference shape is not a
+    meaningful contract. Structural keys are still required either way.
     """
     with np.load(path) as data:
         meta = json.loads(bytes(data["__meta__"]).decode())
@@ -76,7 +98,8 @@ def restore_checkpoint(path: str, reference: Any) -> tuple[Any, int, dict]:
             raise KeyError(f"checkpoint missing leaf {key!r}")
         seen.add(key)
         arr = flat[key]
-        if arr.shape != ref_leaf.shape:
+        dynamic = any(key.startswith(p) for p in dynamic_prefixes)
+        if not dynamic and arr.shape != ref_leaf.shape:
             raise ValueError(f"{key}: checkpoint shape {arr.shape} != expected {ref_leaf.shape}")
         if isinstance(ref_leaf, np.ndarray):
             leaves.append(np.asarray(arr, dtype=ref_leaf.dtype))

@@ -73,6 +73,10 @@ class ImportanceSampler(StoreBackedSampler):
 
     scheme_name = "importance"
     validate_plans = False  # rows are the proposal q, not an eq.(8) plan
+    # sample() multiplies its own p/q correction into the weights; layering
+    # the scheduler's urn-cyclic overselection re-weighting on top would
+    # double-correct, so this scheme opts out of scheduler="overselect"
+    supports_overselect = False
 
     def __init__(
         self,

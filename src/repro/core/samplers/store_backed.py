@@ -75,9 +75,11 @@ class StoreBackedSampler(ClusteredSampler):
         self.update_dim = int(update_dim)
         self.staleness_decay = float(staleness_decay)
         # _build_plan runs for the cold-start plan inside PlanService's
-        # constructor, before ClusteredSampler.__init__ sets these
+        # constructor, before ClusteredSampler.__init__ sets these (and
+        # before any tracker could be attached — set that first too)
         self.population = population
         self.m = int(m)
+        self._avail_tracker = None
         self._store = GradientStore(
             population.n_clients,
             update_dim,
@@ -105,6 +107,37 @@ class StoreBackedSampler(ClusteredSampler):
     def _build_plan(self, G) -> SamplingPlan:
         """Map the gradient block (n, d') to this scheme's sampling plan."""
         raise NotImplementedError
+
+    # -- availability-aware planning -----------------------------------------
+    def attach_availability(self, tracker) -> None:
+        """Restrict plan rebuilds to the tracker's recently-seen clients.
+
+        ``tracker`` is a :class:`~repro.fl.availability.AvailabilityTracker`
+        (owned and updated by the server). Schemes that honour it (via
+        :meth:`_cluster_mask`) cluster only clients with presence score ≥
+        the tracker threshold — FedSTaS-style restratification on the
+        observed population — while the plan keeps every client's exact
+        eq. (8) mass, so conditional draws stay exactly unbiased over
+        whichever clients are available. The mask also rides every plan
+        observation, giving the drift monitor its churn term.
+        """
+        self._avail_tracker = tracker
+
+    def _cluster_mask(self):
+        """The rebuild's active-client mask, or None for a full-fleet build.
+
+        None when no tracker is attached or when the mask is degenerate
+        (all active — the restriction is a no-op; none active — there would
+        be nobody to cluster, so the rebuild falls back to the full fleet).
+        Reads the tracker's device buffer by reference — safe against the
+        async worker because score buffers are replaced, never mutated.
+        """
+        if self._avail_tracker is None:
+            return None
+        mask = self._avail_tracker.active_mask()
+        if mask.all() or not mask.any():
+            return None
+        return mask
 
     def _observe_snapshot(self):
         """The value handed to the plan service per observed round.
@@ -147,7 +180,7 @@ class StoreBackedSampler(ClusteredSampler):
                 f"updates shape {tuple(updates.shape)} != ({len(client_ids)}, {self.update_dim})"
             )
         self._store.update(client_ids, updates)
-        self._service.observe(self._observe_snapshot())
+        self._service.observe(self._observe_snapshot(), active=self._cluster_mask())
         if self._service.mode == "sync":
             self._swap_freshest()
 
@@ -238,3 +271,19 @@ class StoreBackedSampler(ClusteredSampler):
         del round_idx
         self._swap_freshest()  # round boundary: adopt the freshest plan
         return self._draw_from_plan(self._plan, available)
+
+    def sample_overselect(
+        self,
+        round_idx: int,
+        n_draws: int,
+        available: Optional[np.ndarray] = None,
+    ) -> SampleResult:
+        del round_idx
+        if not self.supports_overselect:
+            raise NotImplementedError(
+                f"{type(self).__name__} re-weights its draws itself; the "
+                "urn-cyclic overselection re-weighting would not be unbiased "
+                "for it — pick a plan-based scheme for scheduler='overselect'"
+            )
+        self._swap_freshest()  # the same round-boundary swap sample() does
+        return self._draw_from_plan_overselect(self._plan, n_draws, available)

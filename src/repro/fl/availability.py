@@ -1,0 +1,205 @@
+"""Availability history: per-client presence scores driving plan rebuilds.
+
+PR 6 made the *draw* availability-aware (re-normalized urns, unbiased over
+the available set); the plan itself was still clustered over the full
+fleet, so a client that vanished weeks ago kept shaping the similarity
+groups. This module closes that gap the FedSTaS way (Slessor et al., 2024):
+restratify on the *observed* population. An :class:`AvailabilityTracker`
+folds each round's availability mask plus the drawn participants' response
+outcomes — on-time, late (straggled past the deadline but delivered), or
+crashed — into one exponentially-decayed presence score per client::
+
+    score_i  ←  decay · score_i + (1 − decay) · signal_i
+
+where ``signal_i`` is the availability mask (0/1) for undrawn clients and,
+for drawn participants, the graded response outcome: 1.0 on-time,
+``late_credit`` late, 0.0 crashed. Scores start at 1.0 (optimistic cold
+start: the version-0 plan clusters everyone, exactly the paper's setting).
+
+Consumers:
+
+* :meth:`active_mask` (``score ≥ threshold``) restricts which clients the
+  *clustering* step of a plan rebuild groups by similarity
+  (``build_plan_algorithm2(cluster_mask=...)``). The plan itself still
+  covers every client with its exact eq. (8) mass — low-score clients are
+  packed into capacity-feasible filler groups instead of being clustered —
+  so every drawn plan stays exactly unbiased over whatever clients turn
+  out to be available (the ``conditional_plan`` guarantee needs eq. (8)
+  and nothing else; property-tested in ``tests/test_statistics_property``).
+* :class:`~repro.fl.planner.AssignmentDriftMonitor` takes the mask as its
+  churn term, so fleet turnover alone can trigger a rebuild even when the
+  surviving clients' gradients have not drifted.
+
+The score buffer is device-resident when jax is present (one jitted fused
+multiply-add per round, mirroring :class:`~repro.fl.gradient_store.
+GradientStore`'s backend split) with a bit-identical numpy fallback, and
+checkpoints inside ``ServerState`` (:meth:`state_arrays`/:meth:`state_meta`
+ride the server's .npz pytree / JSON sidecar) so a killed service resumes
+its presence history mid-decay, bit-identically.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+
+def _jnp():
+    try:
+        import jax  # noqa: F401
+        import jax.numpy as jnp
+    except ImportError:
+        return None
+    return jnp
+
+
+class AvailabilityTracker:
+    """Exponentially-decayed per-client presence scores in [0, 1].
+
+    ``decay`` is the history half-life knob (0.9 ≈ the last ~10 rounds
+    dominate); ``threshold`` is the :meth:`active_mask` cut; ``late_credit``
+    is the graded signal a straggler earns — between a crash (0.0) and an
+    on-time report (1.0), so a persistently-slow client decays toward
+    ``late_credit`` instead of toward dead.
+    """
+
+    def __init__(
+        self,
+        n_clients: int,
+        *,
+        decay: float = 0.9,
+        threshold: float = 0.25,
+        late_credit: float = 0.5,
+        backend: str = "auto",
+    ):
+        if n_clients <= 0:
+            raise ValueError("n_clients must be positive")
+        if not 0.0 <= decay < 1.0:
+            raise ValueError(f"decay must be in [0, 1), got {decay}")
+        if not 0.0 <= threshold <= 1.0:
+            raise ValueError(f"threshold must be in [0, 1], got {threshold}")
+        if not 0.0 <= late_credit <= 1.0:
+            raise ValueError(f"late_credit must be in [0, 1], got {late_credit}")
+        if backend not in ("auto", "jax", "numpy"):
+            raise ValueError(f"unknown availability backend {backend!r}")
+        self.n_clients = int(n_clients)
+        self.decay = float(decay)
+        self.threshold = float(threshold)
+        self.late_credit = float(late_credit)
+        self.rounds_seen = 0
+        jnp = _jnp() if backend in ("auto", "jax") else None
+        if backend == "jax" and jnp is None:
+            raise RuntimeError("availability backend 'jax' requires jax")
+        self._jnp = jnp
+        if jnp is not None:
+            import jax
+
+            d = np.float32(self.decay)
+
+            def fold(scores, signal):
+                return d * scores + (np.float32(1.0) - d) * signal
+
+            self._fold = jax.jit(fold)
+            self._scores = jnp.ones(self.n_clients, jnp.float32)
+        else:
+            self._fold = None
+            self._scores = np.ones(self.n_clients, np.float32)
+
+    # -- per-round update ----------------------------------------------------
+    def update(
+        self,
+        mask: Optional[np.ndarray],
+        *,
+        on_time: Optional[np.ndarray] = None,
+        late: Optional[np.ndarray] = None,
+        crashed: Optional[np.ndarray] = None,
+    ) -> None:
+        """Fold one round's availability + response outcomes into the scores.
+
+        ``mask`` is the round's availability mask ((n,) bool; ``None`` = the
+        fixed-population all-available case). ``on_time``/``late``/
+        ``crashed`` are disjoint id arrays over the round's drawn
+        participants; their graded outcome overrides the mask signal — a
+        drawn client that crashed mid-round scores 0.0 even though the
+        availability mask admitted it.
+        """
+        signal = (
+            np.ones(self.n_clients, np.float32)
+            if mask is None
+            else np.asarray(mask, dtype=bool).astype(np.float32)
+        )
+        if signal.shape != (self.n_clients,):
+            raise ValueError(
+                f"availability mask shape {signal.shape} != ({self.n_clients},)"
+            )
+        for ids, value in (
+            (on_time, 1.0),
+            (late, self.late_credit),
+            (crashed, 0.0),
+        ):
+            if ids is not None and len(ids):
+                signal[np.asarray(ids, np.int64)] = np.float32(value)
+        if self._jnp is not None:
+            self._scores = self._fold(self._scores, self._jnp.asarray(signal))
+        else:
+            self._scores = (
+                np.float32(self.decay) * self._scores
+                + np.float32(1.0 - self.decay) * signal
+            )
+        self.rounds_seen += 1
+
+    # -- consumers -----------------------------------------------------------
+    def scores(self) -> np.ndarray:
+        """Host f32 copy of the (n,) presence scores."""
+        return np.asarray(self._scores)
+
+    def active_mask(self, threshold: Optional[float] = None) -> np.ndarray:
+        """Boolean (n,) mask of clients worth clustering: score ≥ threshold."""
+        thr = self.threshold if threshold is None else float(threshold)
+        return self.scores() >= np.float32(thr)
+
+    def min_score(self) -> float:
+        """The fleet's weakest presence score (``RoundRecord.avail_score_min``)."""
+        return float(self.scores().min())
+
+    # -- checkpointable state ------------------------------------------------
+    def state_arrays(self) -> dict:
+        return {"avail_scores": self.scores()}
+
+    def state_meta(self) -> dict:
+        return {
+            "decay": self.decay,
+            "threshold": self.threshold,
+            "late_credit": self.late_credit,
+            "rounds_seen": self.rounds_seen,
+        }
+
+    def load_state(self, meta: dict, arrays: dict) -> None:
+        """Restore a checkpointed score buffer; bit-exact continuation.
+
+        The decay constants are identity: restoring a history folded under
+        different knobs would silently re-grade the whole fleet, so a
+        mismatch raises instead.
+        """
+        have = (self.decay, self.threshold, self.late_credit)
+        want = (
+            float(meta["decay"]),
+            float(meta["threshold"]),
+            float(meta["late_credit"]),
+        )
+        if have != want:
+            raise ValueError(
+                f"checkpointed availability knobs (decay, threshold, "
+                f"late_credit)={want} != this tracker's {have}; the decayed "
+                "history is only meaningful under the knobs that produced it"
+            )
+        scores = np.asarray(arrays["avail_scores"], np.float32)
+        if scores.shape != (self.n_clients,):
+            raise ValueError(
+                f"checkpointed scores shape {scores.shape} != ({self.n_clients},)"
+            )
+        self._scores = self._jnp.asarray(scores) if self._jnp is not None else scores.copy()
+        self.rounds_seen = int(meta["rounds_seen"])
+
+
+__all__ = ["AvailabilityTracker"]

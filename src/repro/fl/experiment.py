@@ -12,7 +12,8 @@ client-churn scenario — as a JSON-round-trippable dict of six sections::
       "planner":    {"mode": "async", "rebuild_every": 2},
       "engine":     {"name": "batched"},
       "train":      {"n_rounds": 25, "lr": 0.05},
-      "population": {"name": "poisson", "options": {"leave_rate": 0.2}}
+      "population": {"name": "poisson", "options": {"leave_rate": 0.2}},
+      "scheduler":  {"name": "deadline", "track_availability": true}
     }
 
 ``build_experiment(spec)`` resolves every name through a registry
@@ -279,6 +280,55 @@ class PopulationSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class SchedulerSpec:
+    """How rounds close and whether availability history is tracked.
+
+    ``name`` is a :data:`repro.fl.scheduler.SCHEDULERS` entry (``"sync"`` —
+    the legacy synchronous round and the default; ``"deadline"`` — straggler
+    grading with harvest-into-next-round; ``"overselect"`` — draw
+    ``m·(1+β)``, aggregate the first ``m``); ``options`` passes
+    scheduler-specific knobs (``deadline``, ``straggle_frac``,
+    ``slow_factor``, ``harvest_discount``, ``beta``), checked against the
+    scheduler's signature at build time.
+
+    ``track_availability=True`` additionally attaches an
+    :class:`~repro.fl.availability.AvailabilityTracker` (knobs:
+    ``avail_decay``/``avail_threshold``/``late_credit``) to the server —
+    and to the sampler when it is store-backed, restricting plan rebuilds
+    to recently-seen clients. The default spec — sync, no options, no
+    tracking — attaches *nothing*: batch experiments stay on the exact
+    pre-scheduler code path.
+    """
+
+    name: str = "sync"
+    seed: int = 0
+    options: dict = dataclasses.field(default_factory=dict)
+    track_availability: bool = False
+    avail_decay: float = 0.9
+    avail_threshold: float = 0.25
+    late_credit: float = 0.5
+
+    @property
+    def is_default(self) -> bool:
+        return self.name == "sync" and not self.options and not self.track_availability
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "SchedulerSpec":
+        return _from_dict(cls, d)
+
+    def to_dict(self) -> dict:
+        return {
+            "name": self.name,
+            "seed": self.seed,
+            "options": dict(self.options),
+            "track_availability": self.track_availability,
+            "avail_decay": self.avail_decay,
+            "avail_threshold": self.avail_threshold,
+            "late_credit": self.late_credit,
+        }
+
+
+@dataclasses.dataclass(frozen=True)
 class TrainSpec:
     """Round/optimization hyperparameters + the paper's MLP shape.
 
@@ -326,6 +376,7 @@ class ExperimentSpec:
     engine: EngineSpec = EngineSpec()
     train: TrainSpec = TrainSpec()
     population: PopulationSpec = PopulationSpec()
+    scheduler: SchedulerSpec = SchedulerSpec()
 
     _NESTED = {
         "data": DataSpec,
@@ -334,6 +385,7 @@ class ExperimentSpec:
         "engine": EngineSpec,
         "train": TrainSpec,
         "population": PopulationSpec,
+        "scheduler": SchedulerSpec,
     }
 
     @classmethod
@@ -552,11 +604,33 @@ def build_experiment(
         if spec.population.is_default
         else build_population(spec.population, ds.population.n_clients)
     )
+    # same pattern for the round scheduler / availability tracker: the
+    # default sync-untracked spec attaches neither, keeping the exact
+    # legacy round path (and checkpoint layout)
+    scheduler = availability = None
+    sched = spec.scheduler
+    if not sched.is_default:
+        from repro.fl.availability import AvailabilityTracker
+        from repro.fl.scheduler import build_scheduler
+
+        if sched.name != "sync" or sched.options:
+            scheduler = build_scheduler(
+                sched, n_clients=ds.population.n_clients, m=spec.sampler.m
+            )
+        if sched.track_availability:
+            availability = AvailabilityTracker(
+                ds.population.n_clients,
+                decay=sched.avail_decay,
+                threshold=sched.avail_threshold,
+                late_credit=sched.late_credit,
+            )
+            if hasattr(sampler, "attach_availability"):
+                sampler.attach_availability(availability)
     lf = loss_fn if loss_fn is not None else (fedprox_loss if tr.fedprox_mu else classification_loss)
     af = acc_fn if acc_fn is not None else accuracy
     return FederatedServer(
         ds, sampler, params, sgd(tr.lr, tr.momentum), cfg, loss_fn=lf, acc_fn=af,
-        population=pop,
+        population=pop, scheduler=scheduler, availability=availability,
     )
 
 
@@ -567,6 +641,7 @@ __all__ = [
     "EngineSpec",
     "TrainSpec",
     "PopulationSpec",
+    "SchedulerSpec",
     "ExperimentSpec",
     "DATASETS",
     "register_dataset",

@@ -144,6 +144,15 @@ class GradientStore:
                     G = jax.lax.with_sharding_constraint(G, sharding)
                 return G
 
+            def scatter_plain(G, ids, vals, scale):
+                # decay-free variant: overwrite rows with scale·vals and leave
+                # the rest of the buffer untouched (harvest replays must not
+                # age the whole fleet a second time)
+                G = G.at[ids].set(vals.astype(jnp.float32) * scale, mode="drop")
+                if sharding is not None:
+                    G = jax.lax.with_sharding_constraint(G, sharding)
+                return G
+
             def gather(G, ids):
                 rows = jnp.take(G, ids, axis=0)
                 if sharding is not None:
@@ -151,6 +160,7 @@ class GradientStore:
                 return rows
 
             self._scatter = jax.jit(scatter)
+            self._scatter_plain = jax.jit(scatter_plain)
             self._gather = jax.jit(gather)
             G0 = jnp.zeros((self.n_clients, self.dim), jnp.float32)
             self._G = (
@@ -211,6 +221,45 @@ class GradientStore:
             if self.staleness_decay < 1.0:
                 self._G = self._G * np.float32(self.staleness_decay)
             self._G[ids[keep]] = vals[keep]
+
+    def scatter_scaled(self, client_ids, updates, *, scale: float = 1.0) -> None:
+        """Overwrite rows ``client_ids`` with ``scale · updates`` — no decay.
+
+        The harvest-replay path (``DeadlineScheduler``): a straggler's update
+        delivered after the deadline lands in the *next* round's store,
+        discounted by ``scale``, without re-applying the whole-buffer
+        staleness decay that :meth:`update` already charged this round.
+        Sketching, id-dropping and last-write-wins semantics match
+        :meth:`update` exactly; the scale multiplies the sketched rows (the
+        sketches are linear, so the order is immaterial).
+        """
+        if tuple(updates.shape)[1:] != (self.update_dim,):
+            raise ValueError(
+                f"updates shape {tuple(updates.shape)} != (len(ids), {self.update_dim})"
+            )
+        if len(client_ids) != updates.shape[0]:
+            raise ValueError(
+                f"{len(client_ids)} ids for {updates.shape[0]} update rows"
+            )
+        if len(client_ids) == 0:
+            return
+        if self._jnp is not None:
+            ids = np.asarray(client_ids, np.int32)
+            take = _dedupe_last(ids)
+            vals = self._apply_sketch(self._jnp.asarray(updates))
+            if not isinstance(take, slice):
+                ids, vals = ids[take], vals[np.asarray(take)]
+            self._G = self._scatter_plain(
+                self._G, self._jnp.asarray(ids), vals, np.float32(scale)
+            )
+        else:
+            ids = np.asarray(client_ids, np.int64)
+            vals = np.asarray(self._apply_sketch(np.asarray(updates)), np.float32)
+            take = _dedupe_last(ids)
+            if not isinstance(take, slice):
+                ids, vals = ids[take], vals[take]
+            keep = ids < self.n_clients
+            self._G[ids[keep]] = vals[keep] * np.float32(scale)
 
     def snapshot(self):
         """The current G — an immutable device array (or a numpy copy)."""

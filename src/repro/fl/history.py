@@ -43,6 +43,15 @@ class RoundRecord:
     # "empty" (a skipped EmptyRound under a service driver's skip policy)
     n_available: int = -1
     n_dropped: int = 0
+    # round-scheduler telemetry (see repro.fl.scheduler): participants that
+    # straggled past the deadline (plus overselection draws discarded at
+    # draw time), and late updates harvested into this round's gradient
+    # store from the previous round's stragglers
+    n_late: int = 0
+    n_harvested: int = 0
+    # availability-tracker telemetry: the fleet's weakest presence score
+    # after this round's fold (-1.0 = no tracker attached)
+    avail_score_min: float = -1.0
     round_status: str = "ok"
 
     def to_dict(self) -> dict:

@@ -104,7 +104,18 @@ class FederatedServer:
         loss_fn: Callable = classification_loss,
         acc_fn: Callable = accuracy,
         population: Optional[PopulationProcess] = None,
+        scheduler=None,
+        availability=None,
     ):
+        """``scheduler`` (a :class:`~repro.fl.scheduler.RoundScheduler`,
+        optional) makes the round-closing rule pluggable — None keeps the
+        legacy synchronous round exactly. ``availability`` (an
+        :class:`~repro.fl.availability.AvailabilityTracker`, optional) folds
+        each round's mask + participant outcomes into per-client presence
+        scores; attach it to the sampler too
+        (``StoreBackedSampler.attach_availability``) to restrict plan
+        rebuilds to the recently-seen fleet. Both checkpoint inside
+        ``ServerState`` when present."""
         engine_factory = ENGINES.get(config.engine)  # precise unknown-name error
         self.dataset = dataset
         self.sampler = sampler
@@ -114,6 +125,8 @@ class FederatedServer:
         self.loss_fn = loss_fn
         self.acc_fn = acc_fn
         self.population = population
+        self.scheduler = scheduler
+        self.availability = availability
         self._rng = np.random.default_rng(config.seed)
         self.history = History()
         self._x_test, self._y_test = dataset.global_test()
@@ -123,11 +136,17 @@ class FederatedServer:
         mesh = (
             resolve_fl_mesh(config.mesh_spec) if config.engine != "compat" else None
         )
+        # the scheduler owns the engine's padded slot count (all built-ins
+        # keep it at m — overselection thins at draw time — but the contract
+        # lets a custom scheduler stage wider rounds)
+        slots = (
+            sampler.m if scheduler is None else int(scheduler.required_slots(sampler.m))
+        )
         if config.engine == "batched":
             # budget check against the *per-device* footprint: a mesh that
             # shards the client axis is exactly how huge datasets stay stageable
             need = staged_bytes(
-                dataset, sampler.m, config.n_local_steps, config.batch_size, mesh=mesh
+                dataset, slots, config.n_local_steps, config.batch_size, mesh=mesh
             )
             if need > config.max_staged_bytes:
                 fmt = lambda b: f"{b / 2**30:.2f} GiB" if b >= 2**30 else f"{b / 2**20:.2f} MiB"
@@ -141,7 +160,7 @@ class FederatedServer:
                 engine_factory = ENGINES.get("compat")
                 mesh = None  # the compat loop never shards; a stale mesh here
                 # would be handed to the factory and pin devices for nothing
-        self._engine = engine_factory(dataset, sampler.m, config, mesh)
+        self._engine = engine_factory(dataset, slots, config, mesh)
         # service cursor: the next round to run. run()/resume() maintain it so
         # a restored server continues exactly where the checkpoint left off.
         self._start_round = 0
@@ -201,13 +220,18 @@ class FederatedServer:
 
     def _phase_draw(self, t: int, available: Optional[np.ndarray]):
         """Sampler draw conditioned on availability; fails on empty draws."""
-        # no mask → the legacy one-argument call, so custom samplers written
-        # before availability conditioning keep working untouched
-        result = (
-            self.sampler.sample(t)
-            if available is None
-            else self.sampler.sample(t, available)
-        )
+        if self.scheduler is not None:
+            # the scheduler owns the draw shape (overselection draws
+            # m·(1+β) and thins); its base draw is exactly the legacy call
+            result = self.scheduler.draw(t, self.sampler, available)
+        else:
+            # no mask → the legacy one-argument call, so custom samplers
+            # written before availability conditioning keep working untouched
+            result = (
+                self.sampler.sample(t)
+                if available is None
+                else self.sampler.sample(t, available)
+            )
         # sample() is the round boundary where planner-backed samplers swap
         # in the freshest completed plan — capture what this round drew from
         plan_version, plan_lag = self.sampler.plan_telemetry()
@@ -229,13 +253,22 @@ class FederatedServer:
         return result, distinct, weights, plan_version, plan_lag
 
     def _phase_drop_resolution(
-        self, t: int, distinct: np.ndarray, weights: np.ndarray, stale_weight: float
+        self,
+        t: int,
+        distinct: np.ndarray,
+        weights: np.ndarray,
+        stale_weight: float,
+        late: Optional[np.ndarray] = None,
     ) -> tuple[np.ndarray, float, np.ndarray]:
         """Zero dropped participants' weights; their mass goes stale.
 
         Returns ``(weights, stale_weight, dropped)`` — ``dropped`` is the
         boolean mask over ``distinct``. Raises :class:`EmptyRoundError` when
-        every realized participant dropped (all realized mass is gone).
+        every realized participant dropped (all realized mass is gone) —
+        unless ``late`` marks scheduler-resolved stragglers among the
+        survivors: their updates are merely delayed (harvested next round),
+        so a round that lost all its mass to *lateness* proceeds as a
+        stale-only aggregation instead of dying.
         """
         if self.population is None:
             return weights, stale_weight, np.zeros(distinct.shape, dtype=bool)
@@ -243,7 +276,7 @@ class FederatedServer:
         if not dropped.any():
             return weights, stale_weight, dropped
         live = weights[~dropped].sum()
-        if live <= 0:
+        if live <= 0 and not (late is not None and (late & ~dropped).any()):
             raise EmptyRoundError(
                 f"round {t}: all {distinct.size} realized participants dropped "
                 "mid-round (or the survivors carry zero weight) — every bit of "
@@ -274,35 +307,77 @@ class FederatedServer:
     def run_round(self, t: int) -> RoundRecord:
         cfg = self.cfg
         available, n_available = self._phase_availability(t)
+        # scheduler prologue: flush last round's harvested straggler updates
+        # into the gradient store *before* this round draws from it
+        n_harvested = (
+            int(self.scheduler.begin_round(t, self.sampler))
+            if self.scheduler is not None
+            else 0
+        )
         result, distinct, weights, plan_version, plan_lag = self._phase_draw(
             t, available
         )
+        stale_weight = result.stale_weight
+        if self.scheduler is not None:
+            # round-closing rule: mark stragglers late (weight → stale term,
+            # update harvested below) before mid-round drops resolve
+            weights, stale_weight, late = self.scheduler.resolve(
+                t, distinct, weights, stale_weight
+            )
+        else:
+            late = np.zeros(distinct.shape, dtype=bool)
         weights, stale_weight, dropped = self._phase_drop_resolution(
-            t, distinct, weights, result.stale_weight
+            t, distinct, weights, stale_weight, late=late
         )
         n_dropped = int(dropped.sum())
+        # a participant that both straggled and crashed is a crash: the
+        # result never arrived, so there is nothing to harvest either
+        late = late & ~dropped
+        n_late = int(late.sum())
 
         self.params, updates_flat, losses = self._phase_local_work(
             distinct, weights, stale_weight
         )
 
+        if n_late and self.scheduler is not None:
+            # harvest: late updates were computed (the engine ran their
+            # padded slots) — buffer host copies for next round's store
+            self.scheduler.collect(t, distinct[late], updates_flat[np.asarray(late)])
+
         # observe: feed representative gradients back (Algorithm 2's input) —
-        # survivors only; a dropped client's update never reached the server,
-        # so it must not refresh the similarity state either
-        if n_dropped:
-            keep = ~dropped
-            self.sampler.observe_updates(distinct[keep], updates_flat[np.asarray(keep)])
-            contributing = distinct[keep]
-        else:
-            self.sampler.observe_updates(distinct, updates_flat)
-            contributing = distinct
+        # on-time survivors only; a dropped client's update never reached the
+        # server and a straggler's arrives next round via the harvest path,
+        # so neither refreshes the similarity state here
+        keep = ~(dropped | late)
+        contributing = distinct[keep]
+        if contributing.size:
+            self.sampler.observe_updates(
+                contributing, updates_flat[np.asarray(keep)]
+            )
 
         # rebuild-cost telemetry is read *after* observe_updates: the drift
         # statistic (and any sync rebuild) for this round happens there
         plan_build_ms, plan_drift = self.sampler.plan_cost_telemetry()
 
-        classes = np.unique(
-            np.concatenate([self._client_classes[int(c)] for c in contributing])
+        # availability fold: the mask plus this round's graded outcomes —
+        # on-time 1.0, late late_credit, crashed 0.0 (see fl.availability)
+        if self.availability is not None:
+            self.availability.update(
+                available,
+                on_time=contributing,
+                late=distinct[late],
+                crashed=distinct[dropped],
+            )
+            avail_score_min = self.availability.min_score()
+        else:
+            avail_score_min = -1.0
+
+        classes = (
+            np.unique(
+                np.concatenate([self._client_classes[int(c)] for c in contributing])
+            )
+            if contributing.size
+            else np.empty(0, np.int64)
         )
         test_acc = (
             float(self.acc_fn(self.params, jnp.asarray(self._x_test), jnp.asarray(self._y_test)))
@@ -310,14 +385,20 @@ class FederatedServer:
             else float("nan")
         )
         agg_weights = result.agg_weights
-        if n_dropped:
+        if n_dropped or n_late:
             agg_weights = np.array(agg_weights, dtype=np.float64, copy=True)
-            agg_weights[distinct[dropped]] = 0.0
+            agg_weights[distinct[dropped | late]] = 0.0
+        live_mass = float(weights.sum())
         rec = RoundRecord(
             round=t,
-            # dropped participants carry zero weight, so the round loss
-            # averages over survivors only
-            train_loss=float(np.average(losses, weights=weights)),
+            # dropped/late participants carry zero weight, so the round loss
+            # averages over on-time survivors only; a round that lost every
+            # participant to lateness aggregated stale-only mass — no loss
+            train_loss=(
+                float(np.average(losses, weights=weights))
+                if live_mass > 0
+                else float("nan")
+            ),
             test_acc=test_acc,
             n_distinct_clients=len(distinct),
             n_distinct_classes=len(classes),
@@ -328,7 +409,14 @@ class FederatedServer:
             plan_drift=plan_drift,
             n_available=n_available,
             n_dropped=n_dropped,
-            round_status="degraded" if n_dropped else "ok",
+            # n_late also counts draws the scheduler discarded at draw time
+            # (overselection surplus); round_status tracks actual stragglers
+            # and crashes only — planned surplus is not degradation
+            n_late=n_late
+            + (self.scheduler.n_late_extra() if self.scheduler is not None else 0),
+            n_harvested=n_harvested,
+            avail_score_min=avail_score_min,
+            round_status="degraded" if (n_dropped or n_late) else "ok",
         )
         self.history.append(rec)
         self._round_cursor = t + 1
@@ -403,7 +491,16 @@ class FederatedServer:
     # identical availability/dropout trajectory for free.
 
     def _state_tree(self) -> dict:
-        return {"params": self.params, "sampler": self.sampler.state_arrays()}
+        tree = {"params": self.params, "sampler": self.sampler.state_arrays()}
+        # optional subsystems checkpoint as their own sections, present only
+        # when attached — a scheduler-free server's bundle is unchanged, and
+        # restoring a bundle into a differently-configured server fails on
+        # the missing/extra key instead of silently dropping state
+        if self.scheduler is not None:
+            tree["scheduler"] = self.scheduler.state_arrays()
+        if self.availability is not None:
+            tree["availability"] = self.availability.state_arrays()
+        return tree
 
     def checkpoint(self, path: Optional[str] = None) -> str:
         """Write the full ServerState bundle; returns the path written.
@@ -426,6 +523,10 @@ class FederatedServer:
             "sampler": self.sampler.state_meta(),
             "history": json.loads(self.history.to_json()),
         }
+        if self.scheduler is not None:
+            extra["scheduler"] = self.scheduler.state_meta()
+        if self.availability is not None:
+            extra["availability"] = self.availability.state_meta()
         save_checkpoint(path, self._state_tree(), step=self._round_cursor, extra=extra)
         return path
 
@@ -441,17 +542,46 @@ class FederatedServer:
         (plan_lag telemetry may differ, as it does between any two async
         runs). Both pinned in ``tests/test_service_resume.py``.
         """
-        from repro.checkpoint import restore_checkpoint
+        from repro.checkpoint import peek_meta, restore_checkpoint
 
         path = path or self.cfg.checkpoint_path
         if not path:
             raise ValueError(
                 "no checkpoint path: pass one or set FLConfig.checkpoint_path"
             )
-        tree, step, extra = restore_checkpoint(path, self._state_tree())
+        # provenance first: a bundle written by a scheduler-/tracker-free
+        # server must fail with WHY, not with a generic missing-leaf error
+        # from the structural restore below
+        _, preview = peek_meta(path)
+        if self.scheduler is not None and "scheduler" not in preview:
+            raise ValueError(
+                "this server has a round scheduler attached but the "
+                "checkpoint carries no scheduler section — it was written "
+                "by a scheduler-free server"
+            )
+        if self.availability is not None and "availability" not in preview:
+            raise ValueError(
+                "this server tracks availability but the checkpoint "
+                "carries no availability section — it was written by a "
+                "tracker-free server"
+            )
+        # the scheduler subtree is variable-shaped (the harvest buffer holds
+        # however many late updates the killed round produced; a fresh
+        # build's reference buffer is empty) — exempt it from the shape guard
+        tree, step, extra = restore_checkpoint(
+            path,
+            self._state_tree(),
+            dynamic_prefixes=("scheduler/",) if self.scheduler is not None else (),
+        )
         self.params = tree["params"]
         self._rng.bit_generator.state = extra["server_rng"]
         self.sampler.load_state(extra["sampler"], tree["sampler"])
+        if self.scheduler is not None:
+            self.scheduler.load_state(extra["scheduler"], tree.get("scheduler", {}))
+        if self.availability is not None:
+            self.availability.load_state(
+                extra["availability"], tree.get("availability", {})
+            )
         self.history = History.from_json(json.dumps(extra["history"]))
         self._start_round = self._round_cursor = int(step)
         return int(step)

@@ -275,6 +275,8 @@ SUMMARY_STATS: tuple[str, ...] = (
     "mean_distinct_clients",
     "rounds_to_acc",
     "agg_weight_var",
+    "degraded_frac",
+    "avail_time_to_acc",
 )
 
 #: test-accuracy threshold ``rounds_to_acc`` races schemes toward.
@@ -307,6 +309,43 @@ def agg_weight_variance(hist: History) -> float:
     return float(W.var(axis=0, ddof=0).sum())
 
 
+def degraded_fraction(hist: History) -> float:
+    """Fraction of rounds that did not close cleanly (status != "ok").
+
+    Counts both "degraded" rounds (mid-round drops and/or deadline
+    stragglers among the realized participants — see
+    ``RoundRecord.round_status``) and "empty" skipped rounds. The service-
+    quality axis the round-scheduler sweep trades against time-to-accuracy.
+    """
+    status = [r.round_status for r in hist.records]
+    if not status:
+        return float("nan")
+    return float(np.mean([s != "ok" for s in status]))
+
+
+def availability_weighted_time_to_acc(
+    hist: History, rounds: int, target: float = ACC_TARGET
+) -> float:
+    """Availability-weighted rounds-to-accuracy: Σ_{t<T_hit} a_t / n.
+
+    Each round before the accuracy hit costs its *available fraction* of
+    the fleet (``n_available / n_clients``; 1.0 for fixed-population rounds
+    with ``n_available == -1``), so a scheme that reaches the target while
+    most of the fleet is offline scores better than the plain round count
+    suggests — it extracted its progress from fewer client-opportunities.
+    Equals :func:`rounds_to_accuracy` exactly on a fixed population;
+    censored runs integrate over all ``rounds`` like the unweighted race.
+    """
+    n_ref = max((r.n_distinct_clients for r in hist.records), default=0)
+    n_avail = hist.series("n_available").astype(np.float64)
+    # the fleet size: any round's n_available upper-bounds realized distinct
+    # clients; with no population process every entry is -1 → weight 1.0
+    n_fleet = float(max(n_avail.max(), n_ref, 1))
+    w = np.where(n_avail < 0, 1.0, n_avail / n_fleet)
+    t_hit = rounds_to_accuracy(hist, rounds, target)
+    return float(w[: int(min(t_hit, len(w)))].sum())
+
+
 def summarize_history(hist: History, rounds: int) -> dict:
     """The figure-level summary statistics of one run's History."""
     losses = hist.series("train_loss")
@@ -319,6 +358,8 @@ def summarize_history(hist: History, rounds: int) -> dict:
         "mean_distinct_clients": float(hist.series("n_distinct_clients").mean()),
         "rounds_to_acc": rounds_to_accuracy(hist, rounds),
         "agg_weight_var": agg_weight_variance(hist),
+        "degraded_frac": degraded_fraction(hist),
+        "avail_time_to_acc": availability_weighted_time_to_acc(hist, rounds),
     }
 
 
@@ -619,6 +660,8 @@ __all__ = [
     "override_label",
     "set_by_path",
     "summarize_history",
+    "degraded_fraction",
+    "availability_weighted_time_to_acc",
     "run_cell",
     "run_sweep",
     "collate",

@@ -51,7 +51,14 @@ def main(argv=None) -> int:
         help="seconds to sleep after each round (smoke tests: keeps short "
         "campaigns alive long enough for a SIGTERM to land mid-run)",
     )
+    ap.add_argument(
+        "--status-every", type=int, default=1, metavar="N",
+        help="print the per-round status line only every N rounds (default 1: "
+        "every round); the service summary always prints",
+    )
     args = ap.parse_args(argv)
+    if args.status_every < 1:
+        ap.error(f"--status-every must be >= 1, got {args.status_every}")
 
     from repro.fl.experiment import ExperimentSpec, load_spec_dict
 
@@ -77,12 +84,17 @@ def main(argv=None) -> int:
 
     def on_round(rec):
         done_this_run["n"] += 1
-        print(
-            f"[round {rec.round}] status={rec.round_status} "
-            f"loss={rec.train_loss:.4f} acc={rec.test_acc:.4f} "
-            f"avail={rec.n_available} dropped={rec.n_dropped}",
-            flush=True,
-        )
+        if rec.round % args.status_every == 0:
+            late = f" late={rec.n_late} harvested={rec.n_harvested}" if (
+                rec.n_late or rec.n_harvested
+            ) else ""
+            print(
+                f"[round {rec.round}] status={rec.round_status} "
+                f"loss={rec.train_loss:.4f} acc={rec.test_acc:.4f} "
+                f"avail={rec.n_available} dropped={rec.n_dropped}{late} "
+                f"drift={rec.plan_drift:.3f} build_ms={rec.plan_build_ms:.1f}",
+                flush=True,
+            )
         if args.throttle > 0:
             time.sleep(args.throttle)
 

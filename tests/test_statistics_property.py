@@ -142,6 +142,41 @@ def test_availability_conditioned_unbiasedness_algorithm1(ns, m, seed):
 
 @given(populations, ms, masks)
 @settings(max_examples=20, deadline=None)
+def test_masked_rebuild_keeps_eq8_and_stays_unbiased(ns, m, seed):
+    """Availability-restricted rebuilds (``cluster_mask``) for ANY mask:
+    masked-out pool clients ride filler chunks instead of the similarity
+    clustering, but their integer token mass is untouched — eq. (8) holds
+    *exactly*, so the conditional draw stays exactly unbiased over any
+    (independent) availability mask at draw time."""
+    pop = ClientPopulation(np.array(ns))
+    rng = np.random.default_rng(seed)
+    G = rng.normal(size=(pop.n_clients, 6))
+    cmask = _random_mask(pop.n_clients, seed + 7, p_avail=0.5)
+    plan = build_plan_algorithm2(pop, m, G, cluster_mask=cmask)
+    validate_plan(plan, pop)
+    # exact integer eq.(8): column sums m·n_i, every urn holds M tokens
+    np.testing.assert_array_equal(plan.r_tokens.sum(axis=0), m * pop.n_samples)
+    np.testing.assert_array_equal(
+        plan.r_tokens.sum(axis=1), np.full(m, pop.total_samples)
+    )
+    # only masked-in clients may carry similarity-cluster labels (except
+    # the degenerate masks — all-in / no masked-in pool client — where the
+    # build falls back to clustering the whole pool)
+    mass = m * pop.n_samples
+    pool = np.flatnonzero(mass % pop.total_samples > 0)
+    if not cmask.all() and cmask[pool].any():
+        assert (plan.cluster_of[~cmask] == -1).all()
+    # the draw-time availability mask is independent of the rebuild mask
+    a = _random_mask(pop.n_clients, seed + 13)
+    p = pop.importances
+    target = p * a / (p * a).sum()
+    np.testing.assert_allclose(
+        _conditional_expected_weights(plan, a), target, atol=1e-12
+    )
+
+
+@given(populations, ms, masks)
+@settings(max_examples=20, deadline=None)
 def test_availability_conditioned_unbiasedness_algorithm2_and_md(ns, m, seed):
     from repro.core.types import SamplingPlan
 
